@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, k-means + NMI (no sklearn offline),
+CSV row emission in the required ``name,us_per_call,derived`` format."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------- tiny kmeans + NMI (paper §B.1.4 evaluation) --------------
+
+def kmeans(x: np.ndarray, k: int, iters: int = 30, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    centers = x[rng.choice(x.shape[0], k, replace=False)].copy()
+    assign = np.zeros(x.shape[0], np.int64)
+    for _ in range(iters):
+        d = ((x[:, None, :] - centers[None]) ** 2).sum(-1)
+        new_assign = d.argmin(1)
+        if (new_assign == assign).all():
+            break
+        assign = new_assign
+        for j in range(k):
+            pts = x[assign == j]
+            if len(pts):
+                centers[j] = pts.mean(0)
+    return assign
+
+
+def nmi(a: np.ndarray, b: np.ndarray) -> float:
+    """Normalized mutual information (sqrt normalisation)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n = a.shape[0]
+    ua, ub = np.unique(a), np.unique(b)
+    cont = np.zeros((len(ua), len(ub)))
+    for i, x in enumerate(ua):
+        for j, y in enumerate(ub):
+            cont[i, j] = np.sum((a == x) & (b == y))
+    p = cont / n
+    pa = p.sum(1, keepdims=True)
+    pb = p.sum(0, keepdims=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mi = np.nansum(p * np.log(p / (pa @ pb)))
+        ha = -np.nansum(pa * np.log(pa))
+        hb = -np.nansum(pb * np.log(pb))
+    return float(mi / max(np.sqrt(ha * hb), 1e-12))

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks.
+
+Wall-clock on this container is CPU (interpret-mode Pallas is a semantics
+check, not a perf number), so the honest comparison is:
+  * XLA-path wall time of the decode/encode/attention ops on CPU (relative
+    cost of onehot vs gather decode — the TPU adaptation argument), and
+  * the roofline-derived TPU estimates from the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.kernels.flash_attention.ref import mha_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # decode: gather vs onehot (B=8192 tokens, paper §5.3 c/m, d_c=512)
+    cfg = DecoderConfig(c=256, m=16, d_c=512, d_m=512, d_e=64,
+                        compute_dtype="float32")
+    p = init_decoder(KEY, cfg)
+    codes = jax.random.randint(KEY, (8192, cfg.m), 0, cfg.c)
+    for impl in ("gather", "onehot"):
+        c2 = dataclasses.replace(cfg, lookup_impl=impl)
+        f = jax.jit(lambda p, c: apply_decoder(p, c, c2))
+        us = time_fn(f, p, codes)
+        emit(f"kernels/hash_decode/{impl}/cpu", us,
+             "B=8192,c=256,m=16,d_c=512 (CPU favors gather; onehot targets the MXU)")
+
+    # dense-table lookup baseline (what compression replaces)
+    table = jax.random.normal(KEY, (200_000, 64))
+    ids = jax.random.randint(KEY, (8192,), 0, 200_000)
+    us = time_fn(jax.jit(lambda t, i: t[i]), table, ids)
+    emit("kernels/dense_table_lookup/cpu", us, "n=200k,d=64")
+
+    # lsh encode: one 32-bit word over (65536, 256)
+    A = jax.random.normal(KEY, (65536, 256))
+    V = jax.random.normal(jax.random.fold_in(KEY, 1), (256, 32))
+    t = jnp.zeros((32,))
+    from repro.kernels.lsh_encode.ref import lsh_encode_word_ref
+    us = time_fn(jax.jit(lsh_encode_word_ref), A, V, t)
+    emit("kernels/lsh_encode_word/cpu", us, "n=65536,d=256,w=32")
+
+    # attention reference at a prefill-ish shape
+    q = jax.random.normal(KEY, (1, 8, 1024, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 1024, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 1024, 64))
+    us = time_fn(jax.jit(lambda q, k, v: mha_ref(q, k, v, causal=True)), q, k, v)
+    emit("kernels/attention_xla/cpu", us, "B1,H8,K2,S1024,D64")

@@ -1,0 +1,37 @@
+"""Roofline summary over dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun_baseline/*.json (if present — the dry-run must be run
+separately: it needs the 512-device XLA flag which benchmarks must NOT set)
+and emits one row per cell with the three terms + dominant + fraction.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DIRS = ("results/dryrun_final", "results/dryrun_baseline")
+
+
+def run():
+    d = next((x for x in DIRS if os.path.isdir(x)), None)
+    if d is None:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(path))
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            emit(name, 0.0, "skipped:subquadratic-required")
+            continue
+        if rec["status"] != "ok":
+            emit(name, 0.0, f"FAILED:{rec.get('error', '?')[:60]}")
+            continue
+        r = rec["roofline"]
+        emit(name, r["step_s"] * 1e6,
+             f"dom={r['dominant']};c={r['compute_s']:.4f};m={r['memory_s']:.4f};"
+             f"x={r['collective_s']:.4f};frac={r['roofline_fraction']:.3f};"
+             f"useful={r['useful_ratio']:.2f}")

@@ -1,0 +1,56 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# Modules (see each for the claim it validates):
+#   fig1_reconstruction  Figure 1  — coding schemes vs entity count
+#   fig3_collisions      Figure 3  — median vs zero LSH threshold
+#   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
+#   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
+#   table3_merchant      Table 3   — bipartite merchant classification
+#   table5_cm_sweep      Table 5   — (c, m) sweep
+#   kernels_micro        kernel CPU microbenchmarks
+#   roofline_report      §Roofline summary from dry-run artifacts (if present)
+#
+# Run all:        PYTHONPATH=src python -m benchmarks.run
+# Run a subset:   PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_4_6_memory",   # instant, exact — first
+    "fig3_collisions",
+    "kernels_micro",
+    "roofline_report",
+    "fig1_reconstruction",
+    "table5_cm_sweep",
+    "table1_gnn",
+    "table3_merchant",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module-name substrings")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and not any(s in name for s in args.only.split(",")):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Table 3 — merchant-category identification (§5.3), reduced scale.
+
+Consumer×merchant bipartite transaction graph with Zipf-imbalanced
+categories and degree imbalance (the §5.3 difficulty notes); GraphSAGE with
+fanout 5 per §5.3.2; Rand vs Hash coding (NC is infeasible at the paper's
+scale — here we keep the same omission).  Metrics: accuracy + hit@k.
+Claim: Hash > Rand on all metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_gnn import merchant_config
+from repro.core import lsh
+from repro.graph import NeighborSampler
+from repro.graph.generate import bipartite_transaction_graph, train_val_test_split
+from repro.models import gnn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+N_CONSUMERS = 6000
+N_MERCHANTS = 4000
+N_CATEGORIES = 32
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    adj, merchant_cat, n_cons = bipartite_transaction_graph(
+        0, N_CONSUMERS, N_MERCHANTS, N_CATEGORIES)
+    n_nodes = N_CONSUMERS + N_MERCHANTS
+    merchants = np.arange(N_MERCHANTS) + n_cons
+    tr_i, va_i, te_i = train_val_test_split(0, N_MERCHANTS)   # 70/10/20 (§5.3.1)
+    labels = merchant_cat
+    ocfg = AdamWConfig(lr=1e-2, weight_decay=0.0)             # §5.3.2
+
+    for kind in ("random_full", "hash_full"):
+        cfg = merchant_config(n_nodes, N_CATEGORIES, kind)
+        cfg = dataclasses.replace(
+            cfg, embedding=dataclasses.replace(cfg.embedding, c=16, m=8,
+                                               d_c=64, d_m=64))
+        codes = (lsh.encode_lsh(KEY, adj, 16, 8) if kind == "hash_full"
+                 else lsh.encode_random(KEY, n_nodes, 16, 8))
+        p = gnn.init_gnn(KEY, cfg, codes=codes)
+        sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
+        st = adamw_init(p)
+
+        @jax.jit
+        def step(p, st, levels, y):
+            def loss_fn(p):
+                h = gnn.sage_forward(p, levels, cfg)
+                return gnn.node_loss(gnn.node_logits(p, h, cfg), y)
+            loss, g = jax.value_and_grad(loss_fn, allow_int=True)(p)
+            p, st = adamw_update(p, g, st, ocfg)
+            return p, st, loss
+
+        t0 = time.time()
+        nsteps = 0
+        for epoch in range(4):
+            for levels, batch in sampler.minibatches(merchants[tr_i], 256):
+                y = jnp.asarray(labels[batch - n_cons])
+                p, st, _ = step(p, st, [jnp.asarray(l) for l in levels], y)
+                nsteps += 1
+
+        levels, batch = next(sampler.minibatches(merchants[te_i], 800, shuffle=False))
+        h = gnn.sage_forward(p, [jnp.asarray(l) for l in levels], cfg)
+        logits = gnn.node_logits(p, h, cfg)
+        y = labels[batch - n_cons]
+        acc = gnn.accuracy(logits, y)
+        name = "Hash" if kind == "hash_full" else "Rand"
+        emit(f"table3/{name}", (time.time() - t0) / nsteps * 1e6,
+             f"acc={acc:.4f};hit@5={gnn.hit_rate_at_k(logits, y, 5):.4f};"
+             f"hit@10={gnn.hit_rate_at_k(logits, y, 10):.4f}")

@@ -1,0 +1,44 @@
+"""Paper Table 5 — reconstruction quality across (c, m) settings for random
+vs hashing coding, at fixed 128-bit codes.  Reduced CPU scale: 64-bit codes,
+two entity counts; quality = k-means NMI (the metapath2vec protocol).
+Claim: hashing >= random in (almost) all cells, gap grows with n."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, kmeans, nmi
+from benchmarks.fig1_reconstruction import _train_decoder_on_reconstruction
+from repro.core import lsh
+from repro.core.embedding import decode_all
+from repro.graph.generate import clustered_embeddings
+
+SETTINGS = [(2, 64), (4, 32), (16, 16), (256, 8)]   # all 64-bit codes
+DIM = 64
+EVAL_N = 2000
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for n_entities in (2000, 8000):
+        emb, labels = clustered_embeddings(0, n_entities, DIM, 8, noise=0.35)
+        embj = jnp.asarray(emb)
+        for c, m in SETTINGS:
+            for scheme in ("random", "hashing"):
+                codes = (lsh.encode_random(key, n_entities, c, m)
+                         if scheme == "random" else lsh.encode_lsh(key, embj, c, m))
+                import benchmarks.fig1_reconstruction as f1
+                f1.C, f1.M = c, m     # reuse the trainer at this (c, m)
+                t0 = time.time()
+                params, cfg, loss = _train_decoder_on_reconstruction(
+                    key, embj, codes, steps=200)
+                rec = np.asarray(decode_all(params, cfg))
+                q = nmi(kmeans(rec[:EVAL_N], 8), labels[:EVAL_N])
+                emit(f"table5/c{c}m{m}/{scheme}/n{n_entities}",
+                     (time.time() - t0) / 200 * 1e6, f"nmi={q:.4f}")
+    f1 = __import__("benchmarks.fig1_reconstruction", fromlist=["C"])
+    f1.C, f1.M = 16, 16   # restore defaults

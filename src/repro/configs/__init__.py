@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    EmbeddingSpec, GNNConfig, LMConfig, get_config, list_archs, register,
+)
+from repro.configs.reduced import reduced
+
+__all__ = ["EmbeddingSpec", "GNNConfig", "LMConfig", "get_config",
+           "list_archs", "register", "reduced"]

@@ -1,0 +1,19 @@
+"""Imports every per-architecture config module so the registry populates."""
+
+import repro.configs.zamba2_7b          # noqa: F401
+import repro.configs.qwen1_5_0_5b       # noqa: F401
+import repro.configs.internlm2_20b      # noqa: F401
+import repro.configs.chatglm3_6b        # noqa: F401
+import repro.configs.yi_9b              # noqa: F401
+import repro.configs.musicgen_large     # noqa: F401
+import repro.configs.mamba2_2_7b        # noqa: F401
+import repro.configs.dbrx_132b          # noqa: F401
+import repro.configs.granite_moe_3b     # noqa: F401
+import repro.configs.qwen2_vl_7b        # noqa: F401
+import repro.configs.paper_gnn          # noqa: F401
+
+ASSIGNED = [
+    "zamba2-7b", "qwen1.5-0.5b", "internlm2-20b", "chatglm3-6b", "yi-9b",
+    "musicgen-large", "mamba2-2.7b", "dbrx-132b", "granite-moe-3b-a800m",
+    "qwen2-vl-7b",
+]

@@ -1,0 +1,27 @@
+"""dbrx-132b [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+16 experts top-4 (fine-grained).  [hf:databricks/dbrx-base; unverified]
+
+EP: 16 experts over the 16-way model axis — exactly 1 expert/shard.
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("dbrx-132b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        vocab_size=100352,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=10752,
+        n_experts=16,
+        moe_top_k=4,
+        rope_variant="standard",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+    )

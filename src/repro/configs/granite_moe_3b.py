@@ -1,0 +1,29 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) d_ff=512
+per expert, vocab=49155, MoE 40 experts top-8 (fine-grained).
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+EP: 40 experts don't divide the 16-way model axis — padded to 48 (router
+logits for the 8 pad experts masked to -inf; see nn.moe).
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("granite-moe-3b-a800m")
+def config() -> LMConfig:
+    return LMConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        vocab_size=49155,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=512,
+        n_experts=40,
+        moe_top_k=8,
+        rope_variant="standard",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+    )

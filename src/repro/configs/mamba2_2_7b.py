@@ -1,0 +1,26 @@
+"""mamba2-2.7b [ssm] — attention-free SSD (state-space duality).
+64L d_model=2560 vocab=50280 ssm_state=128.  [arXiv:2405.21060; unverified]
+
+d_inner = 2*2560 = 5120, headdim 64 -> 80 SSD heads.  Sub-quadratic: runs
+the long_500k cell with O(1)-per-step state decode.
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("mamba2-2.7b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        n_layers=64,
+        d_model=2560,
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_headdim=64,
+        ssm_expand=2,
+        rope_variant="none",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+        subquadratic=True,
+    )

@@ -1,0 +1,27 @@
+"""qwen1.5-0.5b [dense] — 24L d_model=1024 16H (GQA kv=16) d_ff=2816
+vocab=151936, QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]
+
+Paper-technique fit: the BEST case in the pool — the 151,936x1024 embedding
+table is ~39% of all parameters; hash compression shrinks it ~40x.
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("qwen1.5-0.5b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="qwen1.5-0.5b",
+        family="dense",
+        n_layers=24,
+        d_model=1024,
+        vocab_size=151936,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=2816,
+        qkv_bias=True,
+        rope_variant="standard",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+    )

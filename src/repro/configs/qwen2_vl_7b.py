@@ -1,0 +1,32 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064; M-RoPE (temporal/height/width rotary sections), dynamic
+resolution.  [arXiv:2409.12191; hf]
+
+Frontend stub: the vision tower is out of scope; the multimodal sequence is
+represented by token ids + a 3-stream M-RoPE position-id tensor (3, B, S)
+supplied by input_specs() — dynamic resolution manifests entirely through
+those position streams.  head_dim 128 -> 64 rotary freqs split (16, 24, 24).
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("qwen2-vl-7b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="qwen2-vl-7b",
+        family="vlm",
+        n_layers=28,
+        d_model=3584,
+        vocab_size=152064,
+        n_heads=28,
+        n_kv_heads=4,
+        d_ff=18944,
+        qkv_bias=True,
+        rope_variant="mrope",
+        mrope_sections=(16, 24, 24),
+        input_mode="tokens_mrope",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+    )

@@ -1,0 +1,22 @@
+"""yi-9b [dense] — llama-arch GQA. 48L d_model=4096 32H (GQA kv=4)
+d_ff=11008 vocab=64000.  [arXiv:2403.04652; hf]"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("yi-9b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="yi-9b",
+        family="dense",
+        n_layers=48,
+        d_model=4096,
+        vocab_size=64000,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=11008,
+        rope_variant="standard",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+    )

@@ -1,0 +1,35 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + ONE shared transformer block
+re-invoked every 6 mamba layers (weight sharing, per-site KV caches).
+81L d_model=3584 32H (GQA kv=32 => MHA in the shared block) d_ff=14336
+vocab=32000 ssm_state=64.  [arXiv:2411.15242; unverified]
+
+Paper-technique fit: vocab 32,000 — hash-compressed input embedding on by
+default.  Sub-quadratic (SSD mixer) => runs the long_500k cell.
+"""
+
+from repro.configs.base import EmbeddingSpec, LMConfig, register
+
+
+@register("zamba2-7b")
+def config() -> LMConfig:
+    return LMConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        n_layers=81,
+        d_model=3584,
+        vocab_size=32000,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=112,
+        d_ff=14336,
+        ssm_state=64,
+        ssm_headdim=64,
+        ssm_expand=2,
+        attn_every=6,
+        rope_variant="standard",
+        act="swiglu",
+        norm="rmsnorm",
+        embedding=EmbeddingSpec(kind="hash_full"),
+        subquadratic=True,
+        notes="81 = 13 groups x 6 mamba layers + 3 tail; shared attn after each group",
+    )

@@ -1,0 +1,29 @@
+"""The paper's primary contribution: hash-based embedding compression.
+
+encode (one-shot, training-free)        -> core.lsh.encode_lsh (Algorithm 1)
+store  (packed bit codes)               -> core.codes
+decode (trainable, entity-independent)  -> core.decoder
+drop-in layer                           -> core.embedding (init/lookup API)
+baselines                               -> lsh.encode_random (ALONE), core.autoencoder
+memory model                            -> core.memory (Tables 2/4/6, exact)
+"""
+
+from repro.core import codes
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.core.embedding import (
+    EmbeddingConfig,
+    embed_lookup,
+    init_embedding,
+    make_codes,
+    decode_all,
+)
+from repro.core.lsh import encode_lsh, encode_lsh_codes, encode_random
+from repro.core.memory import compression_ratio, memory_breakdown
+
+__all__ = [
+    "codes",
+    "DecoderConfig", "apply_decoder", "init_decoder",
+    "EmbeddingConfig", "embed_lookup", "init_embedding", "make_codes", "decode_all",
+    "encode_lsh", "encode_lsh_codes", "encode_random",
+    "compression_ratio", "memory_breakdown",
+]

@@ -1,0 +1,114 @@
+"""Learning-based coding baseline (paper Fig. 1 "learn"; Shu & Nakayama 2018).
+
+An encoder MLP maps a pre-trained embedding to ``m`` categorical
+distributions over ``c`` codes; discrete codes are taken by Gumbel-softmax
+with straight-through argmax; the shared decoder (core/decoder.py)
+reconstructs the embedding.  After training, codes are frozen with a final
+argmax pass and only the decoder is kept — the paper's point is that this
+needs a pre-training stage over the *full* embedding table, which is exactly
+what makes it inapplicable at industrial scale (§2), but it is the strongest
+reconstruction baseline so we implement it for Fig. 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.core import codes as codes_lib
+from repro.nn import module as nn
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoencoderConfig:
+    d_in: int
+    c: int = 256
+    m: int = 16
+    d_h: int = 512
+    decoder: DecoderConfig = dataclasses.field(default_factory=DecoderConfig)
+    tau: float = 1.0  # Gumbel-softmax temperature
+
+
+def init_autoencoder(key, cfg: AutoencoderConfig) -> nn.Params:
+    ks = nn.split_keys(key, ["enc1", "enc2", "dec"])
+    return {
+        "enc": {
+            "w1": nn.dense_init(ks["enc1"], (cfg.d_in, cfg.d_h)),
+            "b1": jnp.zeros((cfg.d_h,), jnp.float32),
+            "w2": nn.dense_init(ks["enc2"], (cfg.d_h, cfg.m * cfg.c)),
+            "b2": jnp.zeros((cfg.m * cfg.c,), jnp.float32),
+        },
+        "decoder": init_decoder(ks["dec"], cfg.decoder),
+    }
+
+
+def encode_logits(params, x, cfg: AutoencoderConfig) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["enc"]["w1"] + params["enc"]["b1"])
+    logits = h @ params["enc"]["w2"] + params["enc"]["b2"]
+    return logits.reshape(*x.shape[:-1], cfg.m, cfg.c)
+
+
+def _straight_through_onehot(key, logits, tau: float) -> jnp.ndarray:
+    g = jax.random.gumbel(key, logits.shape, logits.dtype)
+    y_soft = jax.nn.softmax((logits + g) / tau, axis=-1)
+    idx = jnp.argmax(y_soft, axis=-1)
+    y_hard = jax.nn.one_hot(idx, logits.shape[-1], dtype=logits.dtype)
+    return y_hard + y_soft - jax.lax.stop_gradient(y_soft)
+
+
+def reconstruct(params, x, key, cfg: AutoencoderConfig) -> jnp.ndarray:
+    """Differentiable forward: x -> codes (ST-gumbel) -> decoder -> x_hat."""
+    logits = encode_logits(params, x, cfg)
+    onehot = _straight_through_onehot(key, logits, cfg.tau)     # (B, m, c)
+    dec = cfg.decoder
+    cb = params["decoder"].get("codebooks", params["decoder"].get("codebooks_buf"))
+    h = jnp.einsum("bmc,mcd->bd", onehot, cb)
+    if dec.variant == "light":
+        h = h * params["decoder"]["w0"][None, :]
+    mlp = params["decoder"]["mlp"]
+    for i in range(dec.n_layers):
+        h = h @ mlp[f"w{i}"] + mlp[f"b{i}"]
+        if i < dec.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def extract_codes(params, x, cfg: AutoencoderConfig) -> jnp.ndarray:
+    """Post-training hard codes, packed storage layout."""
+    logits = encode_logits(params, x, cfg)
+    codes = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return codes_lib.pack_codes(codes, cfg.c, cfg.m)
+
+
+def train_autoencoder(
+    key, emb: jnp.ndarray, cfg: AutoencoderConfig,
+    steps: int = 300, batch: int = 512, lr: float = 1e-3,
+) -> Tuple[nn.Params, float]:
+    """Small self-contained AdamW loop (reconstruction MSE, paper §5.1.2)."""
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+    k_init, k_loop = jax.random.split(key)
+    params = init_autoencoder(k_init, cfg)
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.01)
+    ostate = adamw_init(params)
+
+    def loss_fn(p, xb, k):
+        return jnp.mean((reconstruct(p, xb, k, cfg) - xb) ** 2)
+
+    @jax.jit
+    def step(p, s, xb, k):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, k)
+        p, s = adamw_update(p, grads, s, ocfg)
+        return p, s, loss
+
+    n = emb.shape[0]
+    loss = jnp.inf
+    for i in range(steps):
+        k_it = jax.random.fold_in(k_loop, i)
+        idx = jax.random.randint(jax.random.fold_in(k_it, 1), (batch,), 0, n)
+        params, ostate, loss = step(params, ostate, emb[idx], jax.random.fold_in(k_it, 2))
+    return params, float(loss)

@@ -1,0 +1,145 @@
+"""Decoder model (paper §3.2, Figure 2).
+
+codes (B, m) ints in [0, c)
+  -> retrieve one vector per codebook (m codebooks, each (c, d_c))
+  -> sum the m vectors
+  -> light variant: elementwise-rescale by trainable W0 (codebooks frozen)
+     full  variant: no W0 (codebooks trainable)
+  -> l-layer MLP with ReLU between linear layers: d_c -> d_m -> ... -> d_e
+
+TPU adaptation (DESIGN.md §3): the codebook retrieval is expressed either as
+a gather (``lookup_impl='gather'``, the paper's GPU formulation and our
+oracle) or as a one-hot×codebook matmul (``lookup_impl='onehot'``) which the
+MXU executes natively; the Pallas kernel ``kernels/hash_decode`` fuses the
+one-hot build + matmul + sum + W0 scale (``lookup_impl='pallas'``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderConfig:
+    c: int = 256           # code cardinality
+    m: int = 16            # code length
+    d_c: int = 512         # codebook vector dim
+    d_m: int = 512         # MLP hidden dim
+    d_e: int = 64          # output embedding dim
+    n_layers: int = 3      # number of linear layers (paper's l)
+    variant: str = "full"  # "full" (trainable codebooks) | "light" (frozen + W0)
+    lookup_impl: str = "onehot"  # "gather" | "onehot" | "pallas"
+    compute_dtype: str = "bfloat16"
+
+    def trainable_params(self) -> int:
+        """Paper §3.2 closed-form trainable-parameter count."""
+        mlp = self.d_c * self.d_m + max(self.n_layers - 2, 0) * self.d_m**2 + self.d_m * self.d_e
+        if self.n_layers == 1:
+            mlp = self.d_c * self.d_e
+        if self.variant == "light":
+            return self.d_c + mlp
+        return self.m * self.c * self.d_c + mlp
+
+    def frozen_params(self) -> int:
+        return self.m * self.c * self.d_c if self.variant == "light" else 0
+
+
+def _mlp_dims(cfg: DecoderConfig):
+    if cfg.n_layers == 1:
+        return [(cfg.d_c, cfg.d_e)]
+    dims = [(cfg.d_c, cfg.d_m)]
+    dims += [(cfg.d_m, cfg.d_m)] * (cfg.n_layers - 2)
+    dims += [(cfg.d_m, cfg.d_e)]
+    return dims
+
+
+def init_decoder(key: jax.Array, cfg: DecoderConfig) -> nn.Params:
+    ks = nn.split_keys(key, ["codebooks", "w0", "mlp"])
+    params: nn.Params = {}
+    cb = nn.dense_init(ks["codebooks"], (cfg.m, cfg.c, cfg.d_c), scale=1.0 / jnp.sqrt(cfg.m))
+    if cfg.variant == "light":
+        params["codebooks_buf"] = cb           # frozen (stored off-accelerator in Table 2)
+        params["w0"] = jnp.ones((cfg.d_c,), jnp.float32)
+    elif cfg.variant == "full":
+        params["codebooks"] = cb
+    else:
+        raise ValueError(f"unknown decoder variant {cfg.variant!r}")
+    mlp_keys = jax.random.split(ks["mlp"], cfg.n_layers)
+    params["mlp"] = {
+        f"w{i}": nn.dense_init(mlp_keys[i], dims)
+        for i, dims in enumerate(_mlp_dims(cfg))
+    }
+    params["mlp"].update(
+        {f"b{i}": jnp.zeros((dims[1],), jnp.float32) for i, dims in enumerate(_mlp_dims(cfg))}
+    )
+    return params
+
+
+def _codebook_sum_gather(codebooks: Array, codes: Array) -> Array:
+    """Oracle path: m gathers + sum.  codes (B, m) -> (B, d_c)."""
+    # codebooks (m, c, d_c); take_along_axis over c per codebook
+    gathered = jnp.take_along_axis(
+        codebooks[None],                      # (1, m, c, d_c)
+        codes[:, :, None, None],              # (B, m, 1, 1)
+        axis=2,
+    )                                         # (B, m, 1, d_c)
+    return gathered[:, :, 0, :].sum(axis=1)
+
+
+def _codebook_sum_onehot(codebooks: Array, codes: Array, c: int) -> Array:
+    """MXU path: one-hot × stacked codebooks. codes (B, m) -> (B, d_c).
+
+    onehot is (B, m*c) with exactly m ones; stacked codebooks (m*c, d_c).
+    The sum over m is absorbed into the single matmul.
+    """
+    m, _, d_c = codebooks.shape
+    B = codes.shape[0]
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2)
+    onehot = (codes[:, :, None] == iota_c).astype(codebooks.dtype)  # (B, m, c)
+    return onehot.reshape(B, m * c) @ codebooks.reshape(m * c, d_c)
+
+
+def apply_decoder(
+    params: nn.Params,
+    codes: Array,
+    cfg: DecoderConfig,
+    *,
+    interpret: bool = False,
+) -> Array:
+    """codes (..., m) int32 -> embeddings (..., d_e)."""
+    lead = codes.shape[:-1]
+    codes2d = codes.reshape(-1, cfg.m)
+    dtype = jnp.dtype(cfg.compute_dtype)
+
+    cb = params["codebooks_buf"] if cfg.variant == "light" else params["codebooks"]
+    cb = cb.astype(dtype)
+
+    impl = cfg.lookup_impl
+    if impl == "pallas":
+        from repro.kernels.hash_decode import ops as hd_ops
+        w0 = params["w0"].astype(dtype) if cfg.variant == "light" else None
+        h = hd_ops.hash_decode(codes2d, cb, w0=w0, interpret=interpret)
+    else:
+        if impl == "gather":
+            h = _codebook_sum_gather(cb, codes2d)
+        elif impl == "onehot":
+            h = _codebook_sum_onehot(cb, codes2d, cfg.c)
+        else:
+            raise ValueError(f"unknown lookup_impl {impl!r}")
+        if cfg.variant == "light":
+            h = h * params["w0"].astype(dtype)[None, :]
+
+    mlp = params["mlp"]
+    for i in range(cfg.n_layers):
+        h = h @ mlp[f"w{i}"].astype(dtype) + mlp[f"b{i}"].astype(dtype)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h.reshape(*lead, cfg.d_e)

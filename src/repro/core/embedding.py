@@ -1,0 +1,127 @@
+"""Drop-in embedding layer with optional hash compression (paper §4).
+
+``EmbeddingConfig.kind`` selects:
+  dense         — conventional trainable table (the paper's NC baseline)
+  hash_full     — LSH codes + full decoder (trainable codebooks)
+  hash_light    — LSH codes + light decoder (frozen codebooks + W0)
+  random_full   — ALONE random codes + full decoder (paper's Rand baseline)
+  random_light  — ALONE random codes + light decoder
+
+For compressed kinds the per-entity state is a packed uint32 code row
+(non-trainable ``codes_buf``); the decoder parameters are shared by all
+entities, so total trainable state is independent of ``n_entities``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codes as codes_lib
+from repro.core import lsh
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.nn import module as nn
+
+Array = jnp.ndarray
+
+COMPRESSED_KINDS = ("hash_full", "hash_light", "random_full", "random_light")
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    kind: str                 # dense | hash_full | hash_light | random_full | random_light
+    n_entities: int
+    d_e: int
+    c: int = 256
+    m: int = 16
+    d_c: int = 512
+    d_m: int = 512
+    n_layers: int = 3
+    lookup_impl: str = "onehot"
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.kind in COMPRESSED_KINDS
+
+    def decoder_config(self) -> DecoderConfig:
+        variant = "light" if self.kind.endswith("light") else "full"
+        return DecoderConfig(
+            c=self.c, m=self.m, d_c=self.d_c, d_m=self.d_m, d_e=self.d_e,
+            n_layers=self.n_layers, variant=variant,
+            lookup_impl=self.lookup_impl, compute_dtype=self.compute_dtype,
+        )
+
+
+def make_codes(
+    key: jax.Array,
+    cfg: EmbeddingConfig,
+    aux: Optional[Union[Array, "object"]] = None,
+) -> Array:
+    """Encoding stage.  ``aux`` is the auxiliary matrix A (dense or CSR) for
+    hash kinds; ignored for random kinds."""
+    if cfg.kind.startswith("hash"):
+        if aux is None:
+            raise ValueError(
+                "hash embedding kinds need auxiliary information (adjacency, "
+                "co-occurrence or pre-trained embeddings); got aux=None"
+            )
+        if aux.shape[0] != cfg.n_entities:
+            raise ValueError(f"aux rows {aux.shape[0]} != n_entities {cfg.n_entities}")
+        return lsh.encode_lsh(key, aux, cfg.c, cfg.m)
+    return lsh.encode_random(key, cfg.n_entities, cfg.c, cfg.m)
+
+
+def init_embedding(
+    key: jax.Array,
+    cfg: EmbeddingConfig,
+    codes: Optional[Array] = None,
+    aux=None,
+) -> nn.Params:
+    if cfg.kind == "dense":
+        return {"table": nn.embed_init(key, (cfg.n_entities, cfg.d_e))}
+    if not cfg.is_compressed:
+        raise ValueError(f"unknown embedding kind {cfg.kind!r}")
+    k_code, k_dec = jax.random.split(key)
+    if codes is None:
+        codes = make_codes(k_code, cfg, aux)
+    expected = (cfg.n_entities, codes_lib.n_words(cfg.c, cfg.m))
+    if tuple(codes.shape) != expected:
+        raise ValueError(f"codes shape {tuple(codes.shape)} != {expected}")
+    return {
+        "codes_buf": jnp.asarray(codes, jnp.uint32),
+        "decoder": init_decoder(k_dec, cfg.decoder_config()),
+    }
+
+
+def embed_lookup(
+    params: nn.Params,
+    ids: Array,
+    cfg: EmbeddingConfig,
+    *,
+    interpret: bool = False,
+) -> Array:
+    """ids (...,) int32 -> embeddings (..., d_e)."""
+    if cfg.kind == "dense":
+        table = params["table"].astype(jnp.dtype(cfg.compute_dtype))
+        return table[ids]
+    packed = jnp.take(params["codes_buf"], ids, axis=0)       # (..., n_words)
+    codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)      # (..., m)
+    return apply_decoder(params["decoder"], codes, cfg.decoder_config(), interpret=interpret)
+
+
+def decode_all(params: nn.Params, cfg: EmbeddingConfig, block: int = 8192) -> Array:
+    """Materialise the full reconstructed table (used by reconstruction
+    benchmarks and full-graph GNNs).  Blocked to bound peak memory."""
+    if cfg.kind == "dense":
+        return params["table"]
+    n = cfg.n_entities
+    outs = []
+    fn = jax.jit(lambda p, i: embed_lookup(p, i, cfg))
+    for s in range(0, n, block):
+        ids = jnp.arange(s, min(s + block, n), dtype=jnp.int32)
+        outs.append(fn(params, ids))
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenStream, TokenStreamConfig, cooccurrence_matrix
+
+__all__ = ["TokenStream", "TokenStreamConfig", "cooccurrence_matrix"]

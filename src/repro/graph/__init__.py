@@ -1,0 +1,17 @@
+from repro.graph.csr import CSRMatrix
+from repro.graph.generate import (
+    powerlaw_graph,
+    sbm_graph,
+    bipartite_transaction_graph,
+    clustered_embeddings,
+)
+from repro.graph.sampler import NeighborSampler
+
+__all__ = [
+    "CSRMatrix",
+    "powerlaw_graph",
+    "sbm_graph",
+    "bipartite_transaction_graph",
+    "clustered_embeddings",
+    "NeighborSampler",
+]

@@ -1,0 +1,59 @@
+"""Uniform neighbour sampling (GraphSAGE, paper §4 / Fig. 4).
+
+Sampling happens host-side (numpy) against the padded neighbour table and
+yields fixed-shape device batches:
+
+  step 0: batch of target nodes                     (B,)
+  step 1: fanout[0] first neighbours per target     (B, f1)
+  step 2: fanout[1] second neighbours per first     (B, f1, f2)
+
+Isolated nodes self-sample (pad with the node itself), matching the common
+GraphSAGE implementation behaviour.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.csr import CSRMatrix
+
+
+class NeighborSampler:
+    def __init__(self, adj: CSRMatrix, fanouts: Sequence[int], max_deg: int = 64, seed: int = 0):
+        self.fanouts = tuple(fanouts)
+        self.table, self.deg = adj.neighbor_padded(max_deg)
+        self.max_deg = max_deg
+        self.rng = np.random.default_rng(seed)
+
+    def _sample_level(self, nodes: np.ndarray, fanout: int) -> np.ndarray:
+        """nodes: (...,) -> (..., fanout) sampled neighbour ids."""
+        flat = nodes.reshape(-1)
+        deg = np.minimum(self.deg[flat], self.max_deg)
+        idx = self.rng.integers(0, np.maximum(deg, 1)[:, None], (flat.shape[0], fanout))
+        nbr = self.table[flat[:, None], idx]
+        # isolated nodes (-1 entries): fall back to self
+        nbr = np.where(nbr < 0, flat[:, None], nbr)
+        return nbr.reshape(*nodes.shape, fanout).astype(np.int32)
+
+    def sample(self, batch_nodes: np.ndarray) -> List[np.ndarray]:
+        """Returns [targets (B,), level1 (B,f1), level2 (B,f1,f2), ...]."""
+        levels = [batch_nodes.astype(np.int32)]
+        cur = batch_nodes
+        for f in self.fanouts:
+            cur = self._sample_level(cur, f)
+            levels.append(cur)
+        return levels
+
+    def minibatches(self, nodes: np.ndarray, batch_size: int, shuffle: bool = True):
+        """Yield (levels, batch_node_ids); final short batch is wrapped (padded
+        by resampling from the start) so shapes stay static for jit."""
+        order = self.rng.permutation(nodes) if shuffle else np.asarray(nodes)
+        n = order.shape[0]
+        for s in range(0, n, batch_size):
+            batch = order[s: s + batch_size]
+            if batch.shape[0] < batch_size:
+                pad = order[: batch_size - batch.shape[0]]
+                batch = np.concatenate([batch, pad])
+            yield self.sample(batch), batch

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blocked (flash) attention.
+
+q (B, H, Sq, D), k/v (B, K, Skv, D), GQA with G = H // K; f32 softmax;
+optional causal mask with ``q_offset`` (decode windows).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal: bool = True, q_offset: int = 0) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32)
+    s *= 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[2])
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,4 @@
+from repro.kernels.hash_decode.ops import hash_decode
+from repro.kernels.hash_decode.ref import hash_decode_ref
+
+__all__ = ["hash_decode", "hash_decode_ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused compositional-code decode (DESIGN.md §3.1).
+
+The decoder's codebook retrieval — on GPU a batch of ``m`` gathers — is
+re-expressed for the MXU as ``m`` one-hot × codebook matmuls accumulated in
+VMEM.  The one-hot matrices are built in-register from ``broadcasted_iota``
++ compare (never materialised in HBM); the codebooks stream through VMEM in
+``(m·c, block_d)`` column panels, the codes block stays resident.
+
+Grid: (B / block_b, d_c / block_d); both parallel.
+VMEM per step (defaults block_b=256, block_d=256, c=256, m=16, f32):
+  codes 256×16×4 = 16 KiB, codebook panel 4096×256×4 = 4 MiB,
+  acc 256×256×4 = 256 KiB, onehot (register/VMEM temp) 256×256×4 = 256 KiB
+  — ≈ 4.5 MiB, comfortably inside a v5e core's 16 MiB working budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _decode_body(codes_ref, cb_ref, w0_ref, o_ref, *, c: int, m: int):
+    codes = codes_ref[...]                       # (bB, m) int32
+    bB = codes.shape[0]
+    acc = jnp.zeros((bB, o_ref.shape[1]), jnp.float32)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (bB, c), 1)
+    for j in range(m):                           # m is small & static: unrolled
+        onehot = (codes[:, j][:, None] == iota_c).astype(jnp.float32)
+        panel = cb_ref[j * c: (j + 1) * c, :].astype(jnp.float32)
+        acc += jax.lax.dot_general(
+            onehot, panel, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    if w0_ref is not None:
+        acc *= w0_ref[...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_d", "interpret")
+)
+def hash_decode_fwd(
+    codes: jnp.ndarray,            # (B, m) int32
+    codebooks: jnp.ndarray,        # (m, c, d_c)
+    w0: Optional[jnp.ndarray] = None,   # (d_c,) or None
+    *,
+    block_b: int = 256,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, m = codes.shape
+    m2, c, d_c = codebooks.shape
+    assert m2 == m
+    block_b = min(block_b, B)
+    block_d = min(block_d, d_c)
+    assert B % block_b == 0 and d_c % block_d == 0, (B, d_c, block_b, block_d)
+
+    cb2d = codebooks.reshape(m * c, d_c)
+    grid = (B // block_b, d_c // block_d)
+
+    in_specs = [
+        pl.BlockSpec((block_b, m), lambda i, j: (i, 0)),
+        pl.BlockSpec((m * c, block_d), lambda i, j: (0, j)),
+    ]
+    args = [codes, cb2d]
+    if w0 is not None:
+        in_specs.append(pl.BlockSpec((1, block_d), lambda i, j: (0, j)))
+        args.append(w0.reshape(1, d_c))
+        body = functools.partial(_decode_body, c=c, m=m)
+    else:
+        body = functools.partial(
+            lambda codes_ref, cb_ref, o_ref, **kw: _decode_body(
+                codes_ref, cb_ref, None, o_ref, **kw
+            ),
+            c=c, m=m,
+        )
+
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((B, d_c), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="hash_decode",
+    )(*args)

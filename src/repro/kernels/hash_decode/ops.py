@@ -1,0 +1,73 @@
+"""jit'd wrapper for the hash-decode kernel with custom VJP.
+
+Forward runs the Pallas kernel (or the jnp oracle when ``use_kernel=False``
+/ unaligned shapes); backward is expressed in XLA:
+    d_codebooks[j, code, :] += g ⊙ w0       (scatter-add == onehotᵀ @ g)
+    d_w0 = Σ_b g ⊙ codebook_sum             (recomputed, not saved)
+Codes are integers — no gradient flows to them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash_decode.kernel import hash_decode_fwd
+from repro.kernels.hash_decode.ref import hash_decode_ref
+
+
+def _aligned(B: int, d_c: int, block_b: int, block_d: int) -> bool:
+    return B % min(block_b, B) == 0 and d_c % min(block_d, d_c) == 0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _hash_decode(codes, codebooks, w0, block_b, block_d, interpret, use_kernel):
+    if use_kernel:
+        return hash_decode_fwd(codes, codebooks, w0,
+                               block_b=block_b, block_d=block_d,
+                               interpret=interpret)
+    return hash_decode_ref(codes, codebooks, w0)
+
+
+def _fwd(codes, codebooks, w0, block_b, block_d, interpret, use_kernel):
+    out = _hash_decode(codes, codebooks, w0, block_b, block_d, interpret, use_kernel)
+    return out, (codes, codebooks, w0)
+
+
+def _bwd(block_b, block_d, interpret, use_kernel, res, g):
+    codes, codebooks, w0 = res
+    m, c, _ = codebooks.shape
+    g = g.astype(jnp.float32)
+    gw = g * w0.astype(jnp.float32)[None, :] if w0 is not None else g
+    onehot = (codes[:, :, None] == jnp.arange(c)[None, None, :]).astype(jnp.float32)
+    d_cb = jnp.einsum("bmc,bd->mcd", onehot, gw).astype(codebooks.dtype)
+    if w0 is not None:
+        summed = jnp.einsum("bmc,mcd->bd", onehot, codebooks.astype(jnp.float32))
+        d_w0 = jnp.einsum("bd,bd->d", g, summed).astype(w0.dtype)
+    else:
+        d_w0 = None
+    return None, d_cb, d_w0
+
+
+_hash_decode.defvjp(_fwd, _bwd)
+
+
+def hash_decode(
+    codes: jnp.ndarray,
+    codebooks: jnp.ndarray,
+    w0: Optional[jnp.ndarray] = None,
+    *,
+    block_b: int = 256,
+    block_d: int = 256,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """codes (B, m) int32, codebooks (m, c, d_c) -> (B, d_c) f32."""
+    B = codes.shape[0]
+    d_c = codebooks.shape[2]
+    if use_kernel and not _aligned(B, d_c, block_b, block_d):
+        use_kernel = False
+    return _hash_decode(codes, codebooks, w0, block_b, block_d, interpret, use_kernel)

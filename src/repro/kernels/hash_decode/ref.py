@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused hash-decode kernel.
+
+Semantics: codes (B, m) int32 in [0, c) index m codebooks (m, c, d_c);
+retrieved vectors are summed; optional elementwise rescale by w0 (the light
+decoder's trainable vector).  Output (B, d_c) in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def hash_decode_ref(codes: jnp.ndarray, codebooks: jnp.ndarray,
+                    w0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    m, c, d_c = codebooks.shape
+    onehot = (codes[:, :, None] == jnp.arange(c)[None, None, :])
+    out = jnp.einsum(
+        "bmc,mcd->bd", onehot.astype(jnp.float32), codebooks.astype(jnp.float32)
+    )
+    if w0 is not None:
+        out = out * w0.astype(jnp.float32)[None, :]
+    return out

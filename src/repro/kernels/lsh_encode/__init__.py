@@ -1,0 +1,4 @@
+from repro.kernels.lsh_encode.ops import lsh_encode_packed
+from repro.kernels.lsh_encode.ref import lsh_encode_word_ref
+
+__all__ = ["lsh_encode_packed", "lsh_encode_word_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the LSH projection+binarise+pack kernel.
+
+Semantics: one 32-bit output word per entity —
+  U = A @ V            (A (n, d), V (d, w<=32))
+  bits = U > t         (t (w,) thresholds, typically the per-column median)
+  word = Σ bits_i << i (little-endian within the word)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lsh_encode_word_ref(A: jnp.ndarray, V: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    U = A.astype(jnp.float32) @ V.astype(jnp.float32)
+    bits = (U > t[None, :]).astype(jnp.uint32)
+    shifts = jnp.arange(V.shape[1], dtype=jnp.uint32)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)

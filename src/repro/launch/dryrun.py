@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell: build the step function
+(train / prefill / serve), attach the production sharding policy, then
+``jax.jit(...).lower(**ShapeDtypeStructs).compile()`` — proving the
+distribution config is coherent (sharding propagation succeeds, collectives
+schedule, per-device memory fits) without hardware.  Emits one JSON record
+per cell with memory_analysis, cost_analysis, and the roofline terms
+(DESIGN.md §8); EXPERIMENTS.md §Dry-run/§Roofline are generated from these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--multi-pod | --both-meshes] [--embedding-kind dense|hash_full]
+      [--out results/dryrun] [--microbatches N]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_is_applicable, input_specs
+from repro.models.lm import init_cache
+from repro.parallel.policy import (
+    DEFAULT_STRATEGY, Strategy, batch_shardings, cache_shardings_policy,
+    params_shardings, rules_for, state_shardings,
+)
+from repro.parallel.sharding import use_sharding
+from repro.train.step import (
+    TrainHyper, init_train_state, make_prefill_step, make_serve_step,
+)
+
+# per-arch default gradient-accumulation for train_4k (activation fit;
+# tuned from memory_analysis — see EXPERIMENTS.md §Dry-run)
+DEFAULT_MICROBATCHES = {
+    "qwen1.5-0.5b": 2, "chatglm3-6b": 8, "internlm2-20b": 16, "yi-9b": 8,
+    "musicgen-large": 4, "mamba2-2.7b": 8, "zamba2-7b": 8, "dbrx-132b": 16,
+    "granite-moe-3b-a800m": 4, "qwen2-vl-7b": 8,
+}
+
+
+def build_cell(cfg, shape, mesh, microbatches: int,
+               strategy: Strategy = DEFAULT_STRATEGY,
+               moments_dtype: str = "float32"):
+    """Returns the lowered step for one cell under the sharding policy."""
+    import dataclasses as _dc
+    from repro.parallel.policy import kv_seq_mesh_axis
+    rules = rules_for(strategy, mesh)
+    if shape.kind == "decode":
+        # decode: score/cache constraints must match the sharded cache
+        # layout (flash-decoding split-KV).  Prefill must NOT bind this —
+        # the in-flight cache constraint forces a reshard every layer
+        # (measured +2.9 s collective on internlm2 prefill_32k); its output
+        # cache is resharded once by out_shardings instead.
+        rules = _dc.replace(rules, rules={
+            **rules.rules,
+            "kv_seq": kv_seq_mesh_axis(cfg, mesh, strategy, shape.batch),
+        })
+    with use_sharding(mesh, rules):
+        key = jax.random.PRNGKey(0)
+        batch_tpl = input_specs(cfg, shape)
+        b_shard = batch_shardings(batch_tpl, mesh, strategy)
+
+        if shape.kind == "train":
+            from repro.optim.adamw import AdamWConfig
+            hyper = TrainHyper(
+                microbatches=microbatches,
+                optimizer=AdamWConfig(lr=1e-3, weight_decay=0.01, clip_norm=1.0,
+                                      moments_dtype=moments_dtype))
+            from repro.train.step import make_train_step
+            step = make_train_step(cfg, hyper)
+            mdt = jnp.dtype(moments_dtype)
+            state_tpl = jax.eval_shape(
+                lambda: init_train_state(key, cfg, moments_dtype=mdt))
+            st_shard = state_shardings(cfg, state_tpl, mesh, strategy)
+            jitted = jax.jit(step, in_shardings=(st_shard, b_shard),
+                             out_shardings=(st_shard, None),
+                             donate_argnums=(0,))
+            return jitted.lower(state_tpl, batch_tpl)
+
+        params_tpl = jax.eval_shape(
+            lambda: __import__("repro.models.lm", fromlist=["init_lm"]).init_lm(key, cfg))
+        p_shard = params_shardings(cfg, params_tpl, mesh, strategy)
+        dtype = jnp.dtype(cfg.compute_dtype)
+
+        if shape.kind == "prefill":
+            step = make_prefill_step(cfg, shape.seq)
+            cache_tpl = jax.eval_shape(
+                lambda: init_cache(cfg, shape.batch, shape.seq, dtype))
+            c_shard = cache_shardings_policy(cfg, cache_tpl, mesh, strategy)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, c_shard))
+            return jitted.lower(params_tpl, batch_tpl)
+
+        # decode: one new token against a seq-sized cache
+        step = make_serve_step(cfg)
+        cache_tpl = jax.eval_shape(
+            lambda: init_cache(cfg, shape.batch, shape.seq, dtype))
+        c_shard = cache_shardings_policy(cfg, cache_tpl, mesh, strategy)
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                         out_shardings=(None, c_shard), donate_argnums=(1,))
+        return jitted.lower(params_tpl, cache_tpl, batch_tpl)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             embedding_kind=None, microbatches=None, overrides=None,
+             strategy: Strategy = DEFAULT_STRATEGY,
+             moments_dtype: str = "float32") -> dict:
+    cfg = get_config(arch, **(overrides or {}))
+    if embedding_kind is not None and cfg.embedding.kind != embedding_kind:
+        if not (embedding_kind != "dense" and arch == "musicgen-large"):
+            cfg = dataclasses.replace(
+                cfg, embedding=dataclasses.replace(cfg.embedding, kind=embedding_kind))
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "embedding_kind": cfg.embedding.kind,
+           "strategy": dataclasses.asdict(strategy)}
+    if not cell_is_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic attention; "
+                         f"{arch} is pure full-attention (DESIGN.md §4)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mb = microbatches or DEFAULT_MICROBATCHES.get(arch, 1)
+    if shape.kind == "train":
+        # per-microbatch batch must stay divisible by the DP extent
+        import numpy as _np
+        dp = int(_np.prod([mesh.shape[a] for a in strategy.batch_mesh_axes(mesh)]))
+        while mb > 1 and (shape.batch % mb or (shape.batch // mb) % dp):
+            mb //= 2
+    t0 = time.time()
+    try:
+        lowered = build_cell(cfg, shape, mesh, mb, strategy, moments_dtype)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    # weighted call-graph walk: XLA cost_analysis does not multiply
+    # while-loop (scan) bodies by trip count — hloanalysis does.
+    from repro.launch.hloanalysis import HLOAnalyzer
+    from repro.launch.hbm_model import analytic_hbm_bytes
+    hlo = HLOAnalyzer(text).totals()
+    hbm = analytic_hbm_bytes(cfg, shape, mesh,
+                             microbatches=mb if shape.kind == "train" else 1,
+                             strategy=strategy)
+    terms = roofline.RooflineTerms(
+        flops=hlo.flops,
+        bytes_accessed=hbm["total"],
+        coll_bytes=sum(hlo.coll.values()),
+        coll_breakdown=dict(hlo.coll),
+        model_flops_per_chip=roofline.model_flops(cfg, shape, mesh.size),
+        chips=mesh.size,
+    )
+    rec.update({
+        "status": "ok",
+        "microbatches": mb if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "xla_cost_analysis": {  # unweighted (while bodies counted once)
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "hlo_bytes_unfused": hlo.hbm_bytes,   # CPU-HLO parse (upper bound)
+        "hbm_model": hbm,                     # analytic TPU-fused traffic
+
+        "memory": {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "alias_gib": mem.alias_size_in_bytes / 2**30,
+            "peak_est_gib": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                             + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+        },
+        "roofline": terms.as_dict(),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--embedding-kind", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--moments-dtype", default="float32")
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--profile", choices=["baseline", "optimized"],
+                    default="baseline")
+    ap.add_argument("--strategy", default=None,
+                    help="JSON Strategy overrides, e.g. '{\"dp_over_model\": true}'")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    strategy = DEFAULT_STRATEGY
+    if args.strategy:
+        strategy = Strategy(**json.loads(args.strategy))
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"cost_analysis calibration (per-chip ratio): "
+          f"{roofline.calibrate_cost_analysis(make_production_mesh()):.3f}")
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                kw = dict(embedding_kind=args.embedding_kind,
+                          microbatches=args.microbatches,
+                          strategy=strategy,
+                          moments_dtype=args.moments_dtype,
+                          overrides={"moe_impl": args.moe_impl} if args.moe_impl else None)
+                if args.profile == "optimized":
+                    from repro.launch.profiles import optimized_cell_settings
+                    opt = optimized_cell_settings(arch, SHAPES[shape_name].kind)
+                    if opt:
+                        kw["strategy"] = opt.get("strategy", kw["strategy"])
+                        kw["microbatches"] = opt.get("microbatches", kw["microbatches"])
+                        kw["moments_dtype"] = opt.get("moments_dtype", kw["moments_dtype"])
+                        if opt.get("overrides"):
+                            kw["overrides"] = {**(kw["overrides"] or {}), **opt["overrides"]}
+                rec = run_cell(arch, shape_name, mp, **kw)
+                tag = f"{arch}__{shape_name}__{rec['mesh']}"
+                if args.embedding_kind:
+                    tag += f"__{args.embedding_kind}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"OK   {tag:60s} compile={rec['compile_s']:7.1f}s "
+                          f"mem={rec['memory']['peak_est_gib']:6.2f}GiB "
+                          f"dom={r['dominant']:10s} "
+                          f"terms(c/m/x)=({r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+                          f"{r['collective_s']:.4f})s frac={r['roofline_fraction']:.3f}")
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"SKIP {tag:60s} {rec['reason'][:70]}")
+                else:
+                    n_fail += 1
+                    print(f"FAIL {tag:60s} {rec['error'][:120]}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

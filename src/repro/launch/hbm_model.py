@@ -1,0 +1,176 @@
+"""Analytic per-chip HBM-traffic model (the roofline memory term).
+
+Why analytic: XLA:CPU fuses far less than XLA:TPU, so bytes parsed from the
+CPU-compiled HLO over-count TPU HBM traffic ~5-10x (measured: 60% of parsed
+bytes are elementwise ops a TPU fusion absorbs; see EXPERIMENTS.md §Dry-run).
+FLOPs and collective bytes parse reliably (they live in dot/collective ops);
+the memory term instead uses this explicit, sharding-aware model.  Every
+count below is per-chip per-step; tensors counted once per HBM write + once
+per read (factor 2), with pass multipliers:
+
+  train:   fwd + bwd + remat-recompute  => 3 passes over activations,
+           weights read fwd+bwd+recompute per microbatch, optimizer does
+           7 f32 passes over trainable params (read p/μ/ν/g, write p/μ/ν)
+  prefill: 1 forward pass, cache written once
+  decode:  weights read once, cache read once + one-slot write
+
+Attention scores are NOT counted as HBM traffic (the deployed path is the
+flash kernel — kernels/flash_attention — which keeps them in VMEM);
+``attn_scores_hbm=True`` adds them back for the XLA-attention baseline, and
+that delta is one of the §Perf levers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.launch.shapes import ShapeSpec
+
+BF16 = 2
+F32 = 4
+
+
+def _local_param_bytes(cfg: LMConfig, mesh, dtype_bytes: int,
+                       trainable_only=False, strategy=None) -> float:
+    """Per-chip bytes of the param tree under the production sharding."""
+    from repro.parallel.policy import DEFAULT_STRATEGY, params_shardings
+    from repro.models.lm import init_lm
+    tpl = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    shards = params_shardings(cfg, tpl, mesh, strategy or DEFAULT_STRATEGY)
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tpl), jax.tree.leaves(shards)):
+        if trainable_only and not np.issubdtype(leaf.dtype, np.floating):
+            continue
+        shard_elems = np.prod(sh.shard_shape(leaf.shape)) if leaf.shape else 1
+        total += float(shard_elems) * dtype_bytes
+    return total
+
+
+def _layer_boundary_bytes_per_token(cfg: LMConfig, model_sz: int) -> float:
+    """bf16 bytes crossing HBM per token per layer at fusion boundaries."""
+    D, F = cfg.d_model, cfg.d_ff
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    heads_ok = H and H % model_sz == 0
+    hdiv = model_sz if heads_ok else 1
+    fdiv = model_sz if F and F % model_sz == 0 else 1
+    b = 0.0
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        qkv = (H * Dh + 2 * K * Dh) / hdiv
+        attn_out = (H * Dh) / hdiv + D
+        if cfg.family == "moe":
+            k = cfg.moe_top_k
+            ep = model_sz if cfg.n_experts_padded % model_sz == 0 else 1
+            ffn = k * 3 * F / ep + k * D / ep + D   # dispatched rows + combine
+        else:
+            ffn = 3 * F / fdiv + D
+        b = (2 * D + qkv + attn_out + ffn) * BF16   # + two norm outputs
+    if cfg.family in ("ssm", "hybrid"):
+        DI = cfg.ssm_expand * D
+        N = cfg.ssm_state
+        Hs = DI // cfg.ssm_headdim
+        hs_div = model_sz if Hs % model_sz == 0 else 1
+        L = cfg.ssm_chunk
+        proj = (2 * DI + 2 * N + Hs)
+        conv = (DI + 2 * N)
+        ssd_scores = L * (Hs / hs_div) * F32        # intra-chunk (L,L,H) rows
+        ssd_states = (Hs / hs_div) * N * F32 / max(L, 1) * cfg.ssm_headdim
+        ssm_b = (D + proj + conv + 2 * DI) * BF16 + ssd_scores + ssd_states
+        if cfg.family == "ssm":
+            b = ssm_b
+        else:  # hybrid: mamba layers + 1/attn_every share of the shared block
+            qkv = (H * Dh + 2 * K * Dh) / hdiv
+            attn_out = (H * Dh) / hdiv + D
+            ffn = 3 * F / fdiv + D
+            attn_b = (2 * D + qkv + attn_out + ffn) * BF16
+            b = ssm_b + attn_b / max(cfg.attn_every, 1)
+    return 2.0 * b      # write + read per boundary tensor
+
+
+def _embed_head_bytes_per_token(cfg: LMConfig, model_sz: int, train: bool) -> float:
+    e = cfg.embedding
+    V_local = cfg.vocab_padded / (model_sz if cfg.vocab_padded % model_sz == 0 else 1)
+    logits = V_local * F32 * (3 if train else 1) * 2
+    if e.kind == "dense":
+        emb = cfg.d_model * BF16 * 2
+    else:
+        # packed code row + decoder boundary tensors
+        emb = e.m * (e.c.bit_length() - 1) / 8 \
+            + (e.d_c + e.d_m + cfg.d_model) * BF16 * 2
+        if train:
+            emb *= 3
+    return logits + emb
+
+
+def analytic_hbm_bytes(cfg: LMConfig, shape: ShapeSpec, mesh,
+                       microbatches: int = 1,
+                       attn_scores_hbm: bool = False,
+                       strategy=None) -> Dict[str, float]:
+    from repro.parallel.policy import DEFAULT_STRATEGY
+    strategy = strategy or DEFAULT_STRATEGY
+    chips = mesh.size
+    model_sz = mesh.shape.get("model", 1) if not strategy.dp_over_model else 1
+    mb = max(1, microbatches)
+
+    dp = int(np.prod([mesh.shape[a] for a in strategy.batch_mesh_axes(mesh)]))
+    if shape.kind == "decode":
+        # one token per sequence; batch shards over the data axes when it can
+        tokens_local = shape.batch / dp if shape.batch % dp == 0 else float(shape.batch)
+    else:
+        tokens_local = shape.batch * shape.seq / dp
+
+    w_bf16 = _local_param_bytes(cfg, mesh, BF16, strategy=strategy)
+    w_f32_train = _local_param_bytes(cfg, mesh, F32, trainable_only=True,
+                                     strategy=strategy)
+    act_per_tok = _layer_boundary_bytes_per_token(cfg, model_sz)
+    n_layers = cfg.n_layers
+    eh_per_tok = _embed_head_bytes_per_token(cfg, model_sz, shape.kind == "train")
+
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        out["weights"] = 3.0 * mb * w_bf16            # fwd+bwd+remat, per microbatch
+        out["optimizer"] = 7.0 * w_f32_train          # p,μ,ν,g reads + p,μ,ν writes
+        out["grad_accum"] = (2.0 * (mb - 1)) * w_f32_train
+        out["activations"] = 3.0 * tokens_local * act_per_tok * n_layers
+        out["embed_head"] = tokens_local * eh_per_tok
+        if attn_scores_hbm and cfg.n_heads:
+            H_loc = cfg.n_heads / (model_sz if cfg.n_heads % model_sz == 0 else 1)
+            per_mb_rows = tokens_local / mb
+            sites = n_layers if cfg.family != "hybrid" else n_layers // cfg.attn_every
+            out["attn_scores"] = (3.0 * 2.0 * sites * mb
+                                  * per_mb_rows * shape.seq * H_loc * F32) / 2
+    elif shape.kind == "prefill":
+        out["weights"] = w_bf16
+        out["activations"] = 1.0 * tokens_local * act_per_tok * n_layers
+        out["embed_head"] = tokens_local * eh_per_tok
+        out["cache_write"] = _cache_local_bytes(cfg, shape, mesh)
+        if attn_scores_hbm and cfg.n_heads:
+            H_loc = cfg.n_heads / (model_sz if cfg.n_heads % model_sz == 0 else 1)
+            sites = n_layers if cfg.family != "hybrid" else n_layers // cfg.attn_every
+            out["attn_scores"] = 2.0 * sites * tokens_local * shape.seq * H_loc * F32 / 2
+    else:  # decode
+        out["weights"] = w_bf16
+        out["cache_read"] = _cache_local_bytes(cfg, shape, mesh)
+        out["activations"] = tokens_local * act_per_tok * n_layers
+        out["embed_head"] = tokens_local * eh_per_tok
+    out["total"] = sum(out.values())
+    return out
+
+
+def _cache_local_bytes(cfg: LMConfig, shape: ShapeSpec, mesh) -> float:
+    from repro.models.lm import init_cache
+    from repro.parallel.policy import cache_shardings_policy
+    import jax.numpy as jnp
+    tpl = jax.eval_shape(lambda: init_cache(cfg, shape.batch, shape.seq,
+                                            jnp.bfloat16))
+    shards = cache_shardings_policy(cfg, tpl, mesh)
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tpl), jax.tree.leaves(shards)):
+        if sh is None or not hasattr(sh, "shard_shape"):
+            total += float(np.prod(leaf.shape or (1,))) * leaf.dtype.itemsize
+            continue
+        total += float(np.prod(sh.shard_shape(leaf.shape))) * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,36 @@
+"""Production mesh builders (spec'd in the brief; DESIGN.md §6).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: v5e-256 as (16, 16) = (data, model).  Multi-pod: 2 pods
+= 512 chips as (2, 16, 16) = (pod, data, model); the pod axis only carries
+data parallelism (gradient all-reduce over DCI), model stays intra-pod.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e chip constants (roofline; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW_PER_LINK = 50e9        # B/s per link (~4 links usable per chip on 2D torus)

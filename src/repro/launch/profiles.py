@@ -1,0 +1,69 @@
+"""Per-architecture OPTIMIZED distribution profiles (§Perf outcome).
+
+The baseline table (results/dryrun_v2) uses one uniform policy: Megatron
+TP/EP over the model axis + FSDP over data + per-arch microbatching.  The
+hillclimbs (EXPERIMENTS.md §Perf) showed the right configuration is
+arch-dependent:
+
+  * <10B-parameter models at train_4k: the model axis is better spent on
+    DATA parallelism (dp_over_model) — TP all-reduces dominated their step
+    (e.g. qwen1.5-0.5b 0.98s collective vs 0.106s compute).  Their f32+bf16
+    optimizer state fits under FSDP-over-data alone.
+  * fine-grained MoE (granite): dense-dispatch MoE under pure DP (tiny
+    expert GEMMs; E/top_k=5x FLOP overhead beats 16-way EP's psum+attention
+    replication by 2.2x step time).
+  * dbrx-132b: TP+EP mandatory (state does not fit otherwise); bf16 Adam
+    moments + FSDP over (pod x data); fits only on the 2-pod mesh.
+  * prefill/decode shapes keep the TP policy (their global batches are too
+    small to spread over 256-512 DP shards).
+
+Profiles apply per (arch, shape-kind).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.parallel.policy import Strategy
+
+_DP_ALL = Strategy(dp_over_model=True)
+
+# train_4k optimized settings; None field -> keep baseline default
+OPTIMIZED_TRAIN: Dict[str, Dict[str, Any]] = {
+    "qwen1.5-0.5b": dict(strategy=_DP_ALL, microbatches=1,
+                         moments_dtype="float32",
+                         overrides={"loss_vocab_chunk": 19008}),
+    "chatglm3-6b": dict(strategy=_DP_ALL, microbatches=1,
+                        moments_dtype="bfloat16",
+                        overrides={"loss_vocab_chunk": 8128}),
+    "yi-9b": dict(strategy=_DP_ALL, microbatches=1, moments_dtype="bfloat16",
+                  overrides={"loss_vocab_chunk": 8000}),
+    # 20B f32 masters do not fit under pure DP at mb=1 (32.8 GiB measured);
+    # TP + mb8 + bf16 moments is the best FITTING config (15.9 GiB)
+    # chunked CE hurts under TP (vocab-sharded head chunks force gathers):
+    # plain loss with TP + mb8 + bf16 moments is the fitting config
+    "internlm2-20b": dict(strategy=Strategy(), microbatches=8,
+                          moments_dtype="bfloat16"),
+    "musicgen-large": dict(strategy=_DP_ALL, microbatches=1,
+                           moments_dtype="float32"),
+    "mamba2-2.7b": dict(strategy=_DP_ALL, microbatches=1,
+                        moments_dtype="bfloat16",
+                        overrides={"loss_vocab_chunk": 6304}),
+    "zamba2-7b": dict(strategy=_DP_ALL, microbatches=1,
+                      moments_dtype="bfloat16",
+                      overrides={"loss_vocab_chunk": 4000}),
+    "qwen2-vl-7b": dict(strategy=_DP_ALL, microbatches=1,
+                        moments_dtype="bfloat16",
+                        overrides={"loss_vocab_chunk": 19008}),
+    "granite-moe-3b-a800m": dict(strategy=_DP_ALL, microbatches=1,
+                                 moments_dtype="bfloat16",
+                                 overrides={"moe_impl": "dense"}),
+    "dbrx-132b": dict(strategy=Strategy(), microbatches=8,
+                      moments_dtype="bfloat16"),   # TP/EP mandatory at 132B
+}
+
+
+def optimized_cell_settings(arch: str, shape_kind: str) -> Optional[Dict[str, Any]]:
+    if shape_kind == "train":
+        return OPTIMIZED_TRAIN.get(arch)
+    return None   # prefill/decode keep the baseline TP policy

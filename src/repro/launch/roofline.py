@@ -1,0 +1,221 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §8).
+
+Terms per (arch × shape × mesh), all in seconds-per-step *per chip* (the
+compiled HLO module is the per-device SPMD program, so cost_analysis FLOPs/
+bytes and parsed collective operand bytes are already per-chip — verified
+by ``calibrate_cost_analysis``):
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes_accessed / HBM_bw
+  collective = Σ wire_bytes(op) / link_bw
+      wire_bytes: ring model — all-gather/reduce-scatter move operand·(p−1)/p,
+      all-reduce moves 2·operand·(p−1)/p, all-to-all operand·(p−1)/p,
+      collective-permute operand; p parsed from replica_groups.
+
+Also reported: MODEL_FLOPS = 6·N(:=active params)·tokens (trains) or
+2·N·tokens (forwards), and the usefulness ratio MODEL_FLOPS / (chips·HLO).
+XLA:CPU caveat (documented): cost_analysis reports algebraic FLOPs of the
+lowered ops; fusion differences vs TPU are second-order for these
+matmul-dominated graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(tail: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(tail)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(tail)
+    if m:
+        return len(m.group(1).split(","))
+    return None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Parses per-chip *wire* bytes by collective type from HLO long text.
+
+    XLA prints only result types inline (operands are %refs), so wire bytes
+    derive from the RESULT shape + op semantics (ring model, per chip):
+      all-gather      result R gathered over p: send/recv R·(p−1)/p
+      all-reduce      operand≡result R: 2·R·(p−1)/p (reduce-scatter+gather)
+      reduce-scatter  result r = R/p: wire R·(p−1)/p = r·(p−1)
+      all-to-all      result R: R·(p−1)/p crosses the wire
+      collective-permute  result R: R
+    """
+    out: Dict[str, float] = {
+        "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_types, op, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue  # counted at the matching -start
+        r_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_types))
+        p = _group_size(line) or 2
+        ring = (p - 1) / p
+        if op == "all-reduce":
+            wire = 2.0 * r_bytes * ring
+        elif op == "all-gather":
+            wire = r_bytes * ring
+        elif op == "reduce-scatter":
+            wire = r_bytes * (p - 1)
+        elif op == "all-to-all":
+            wire = r_bytes * ring
+        else:  # collective-permute
+            wire = float(r_bytes)
+        out[op] += wire
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # per-chip HLO flops
+    bytes_accessed: float         # per-chip HBM bytes
+    coll_bytes: float             # per-chip wire bytes
+    coll_breakdown: Dict[str, float]
+    model_flops_per_chip: float   # analytic useful flops
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # ~2 usable ICI links per ring direction on the v5e 2D torus
+        return self.coll_bytes / (2 * ICI_BW_PER_LINK)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time estimate: max of the three terms (perfectly
+        overlapped model; the sum is the no-overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_per_chip / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the estimated step
+        time: useful FLOPs / (peak · step_time)."""
+        if self.step_s == 0:
+            return 0.0
+        return self.model_flops_per_chip / (PEAK_FLOPS_BF16 * self.step_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Analytic MODEL_FLOPS for the cell, per chip.
+
+    train: 6·N_active·tokens;  prefill: 2·N_active·tokens (+ attention
+    quadratic term); decode: 2·N_active·batch (one token each).
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        total = 6.0 * n_active * tokens
+        # attention quadratic term (causal): 12·L·H·Dh·S²·B/2 fwd+bwd
+        if cfg.n_heads:
+            att = 12.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * shape.seq**2 * shape.batch / 2
+            if cfg.family == "hybrid":
+                att = att / cfg.attn_every
+            total += att
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        total = 2.0 * n_active * tokens
+        if cfg.n_heads:
+            att = 4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * shape.seq**2 * shape.batch / 2
+            if cfg.family == "hybrid":
+                att = att / cfg.attn_every
+            total += att
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.batch
+        if cfg.n_heads:
+            att = 4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * shape.seq * shape.batch
+            if cfg.family == "hybrid":
+                att = att / cfg.attn_every
+            total += att
+    return total / n_chips
+
+
+def calibrate_cost_analysis(mesh) -> float:
+    """Compiles a known matmul sharded over the mesh and returns
+    reported_flops / per_chip_flops — ≈1.0 when cost_analysis is per-chip."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = 1024
+    chips = mesh.size
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    b = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    axes = [ax for ax in ("pod", "data") if ax in mesh.shape]
+    sh_a = NamedSharding(mesh, P(axes[0] if len(axes) == 1 else tuple(axes), None))
+    sh_b = NamedSharding(mesh, P(None, "model"))
+    c = jax.jit(lambda a, b: a @ b, in_shardings=(sh_a, sh_b)).lower(a, b).compile()
+    reported = c.cost_analysis().get("flops", 0.0)
+    per_chip = 2.0 * n * n * n / chips
+    return reported / per_chip

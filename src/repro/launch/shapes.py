@@ -1,0 +1,80 @@
+"""Assigned input-shape set + ShapeDtypeStruct input specs per cell.
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 cache holds seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SSM/hybrid only
+
+`input_specs(cfg, shape)` returns weak-type-correct ShapeDtypeStructs for
+every model input — shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_is_applicable(cfg: LMConfig, shape: ShapeSpec) -> bool:
+    """long_500k requires sub-quadratic sequence mixing (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False
+    return True
+
+
+def _token_shape(cfg: LMConfig, batch: int, seq: int):
+    if cfg.input_mode == "audio_tokens":
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's *batch* argument.
+
+    train: {"tokens", "labels"[, "positions"]}
+    prefill: {"tokens"[, "positions"]}
+    decode: {"tokens" (B, 1[, nq])[, "positions"]}
+    """
+    i32 = jnp.int32
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, S), i32),
+            "labels": jax.ShapeDtypeStruct(_token_shape(cfg, B, S), i32),
+        }
+        if cfg.input_mode == "tokens_mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, S), i32)}
+        if cfg.input_mode == "tokens_mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return specs
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct(_token_shape(cfg, B, 1), i32)}
+        if cfg.input_mode == "tokens_mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, 1), i32)
+        return specs
+    raise ValueError(shape.kind)

@@ -1,0 +1,4 @@
+from repro.models import lm
+from repro.models.lm import LMCache, init_cache, init_lm, lm_forward, lm_loss
+
+__all__ = ["lm", "LMCache", "init_cache", "init_lm", "lm_forward", "lm_loss"]

@@ -1,0 +1,173 @@
+"""The paper's GNN stack (§4/§5.2): GraphSAGE, GCN, SGC, GIN with the
+compressed-embedding layer as the input features.
+
+GraphSAGE follows Figure 4 exactly: sample -> code lookup -> decode ->
+mean-aggregate -> concat -> linear(+ReLU), two layers, minibatched via
+NeighborSampler.  GCN / SGC / GIN are full-graph (paper §C.1 trains them
+without minibatches) over the normalised CSR adjacency; their input feature
+matrix is the decoder output for ALL nodes (blocked decode), which is the
+memory trade the paper makes for these models too.
+
+Link prediction (§5.2): dot-product scores on final representations with
+uniform negative sampling, BCE loss, hits@K evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.core import embedding as emb_lib
+from repro.graph.csr import CSRMatrix
+from repro.nn import module as nn
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_gnn(key, cfg: GNNConfig, codes: Optional[Array] = None, aux=None) -> nn.Params:
+    ks = nn.split_keys(key, ["embed", "l1", "l2", "out", "eps"])
+    ecfg = cfg.embedding_config()
+    params: nn.Params = {
+        "embed": emb_lib.init_embedding(ks["embed"], ecfg, codes=codes, aux=aux),
+    }
+    d_e, H = cfg.d_e, cfg.hidden
+    if cfg.model == "sage":
+        params["w1"] = nn.dense_init(ks["l1"], (2 * d_e, H))
+        params["b1"] = jnp.zeros((H,), jnp.float32)
+        params["w2"] = nn.dense_init(ks["l2"], (2 * H, H))
+        params["b2"] = jnp.zeros((H,), jnp.float32)
+    elif cfg.model == "gcn":
+        params["w1"] = nn.dense_init(ks["l1"], (d_e, H))
+        params["b1"] = jnp.zeros((H,), jnp.float32)
+        params["w2"] = nn.dense_init(ks["l2"], (H, H))
+        params["b2"] = jnp.zeros((H,), jnp.float32)
+    elif cfg.model == "sgc":
+        params["w1"] = nn.dense_init(ks["l1"], (d_e, H))
+        params["b1"] = jnp.zeros((H,), jnp.float32)
+    elif cfg.model == "gin":
+        params["eps1"] = jnp.zeros((), jnp.float32)
+        params["eps2"] = jnp.zeros((), jnp.float32)
+        params["mlp1"] = {
+            "w1": nn.dense_init(ks["l1"], (d_e, H)), "b1": jnp.zeros((H,), jnp.float32),
+            "w2": nn.dense_init(jax.random.fold_in(ks["l1"], 1), (H, H)),
+            "b2": jnp.zeros((H,), jnp.float32),
+        }
+        params["mlp2"] = {
+            "w1": nn.dense_init(ks["l2"], (H, H)), "b1": jnp.zeros((H,), jnp.float32),
+            "w2": nn.dense_init(jax.random.fold_in(ks["l2"], 1), (H, H)),
+            "b2": jnp.zeros((H,), jnp.float32),
+        }
+    else:
+        raise ValueError(cfg.model)
+    if cfg.task == "node":
+        params["w_out"] = nn.dense_init(ks["out"], (H, cfg.n_classes))
+        params["b_out"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (minibatched, Figure 4)
+# ---------------------------------------------------------------------------
+
+def sage_forward(params, levels: List[Array], cfg: GNNConfig) -> Array:
+    """levels: [targets (B,), l1 (B,f1), l2 (B,f1,f2)] node ids."""
+    ecfg = cfg.embedding_config()
+    h0 = emb_lib.embed_lookup(params["embed"], levels[0], ecfg)     # (B, de)
+    h1 = emb_lib.embed_lookup(params["embed"], levels[1], ecfg)     # (B, f1, de)
+    h2 = emb_lib.embed_lookup(params["embed"], levels[2], ecfg)     # (B, f1, f2, de)
+
+    # layer 1 (applied to targets and first neighbours)
+    agg0 = h1.mean(axis=1)                                          # (B, de)
+    z0 = jax.nn.relu(jnp.concatenate([agg0, h0], -1) @ params["w1"] + params["b1"])
+    agg1 = h2.mean(axis=2)                                          # (B, f1, de)
+    z1 = jax.nn.relu(jnp.concatenate([agg1, h1], -1) @ params["w1"] + params["b1"])
+
+    # layer 2 (targets only)
+    aggz = z1.mean(axis=1)                                          # (B, H)
+    z = jax.nn.relu(jnp.concatenate([aggz, z0], -1) @ params["w2"] + params["b2"])
+    return z
+
+
+# ---------------------------------------------------------------------------
+# full-graph models
+# ---------------------------------------------------------------------------
+
+def _all_features(params, cfg: GNNConfig) -> Array:
+    ecfg = cfg.embedding_config()
+    if ecfg.kind == "dense":
+        return params["embed"]["table"]
+    ids = jnp.arange(cfg.n_nodes, dtype=jnp.int32)
+    return emb_lib.embed_lookup(params["embed"], ids, ecfg)
+
+
+def fullgraph_forward(params, adj_norm: CSRMatrix, cfg: GNNConfig) -> Array:
+    """Returns final hidden for all nodes (n, H)."""
+    X = _all_features(params, cfg)
+    if cfg.model == "gcn":
+        h = jax.nn.relu(adj_norm.matmat(X) @ params["w1"] + params["b1"])
+        h = adj_norm.matmat(h) @ params["w2"] + params["b2"]
+        return h
+    if cfg.model == "sgc":
+        h = adj_norm.matmat(adj_norm.matmat(X))
+        return h @ params["w1"] + params["b1"]
+    if cfg.model == "gin":
+        def gmlp(m, h):
+            return jax.nn.relu(h @ m["w1"] + m["b1"]) @ m["w2"] + m["b2"]
+        h = gmlp(params["mlp1"], (1 + params["eps1"]) * X + adj_norm.matmat(X))
+        h = jax.nn.relu(h)
+        h = gmlp(params["mlp2"], (1 + params["eps2"]) * h + adj_norm.matmat(h))
+        return h
+    raise ValueError(cfg.model)
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+def node_logits(params, hidden: Array, cfg: GNNConfig) -> Array:
+    return hidden @ params["w_out"] + params["b_out"]
+
+
+def node_loss(logits: Array, labels: Array) -> Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def link_scores(hidden: Array, edges: Array) -> Array:
+    """edges (E, 2) -> dot-product scores (E,)."""
+    return jnp.sum(hidden[edges[:, 0]] * hidden[edges[:, 1]], axis=-1)
+
+
+def link_loss(hidden: Array, pos_edges: Array, neg_edges: Array) -> Array:
+    pos = link_scores(hidden, pos_edges)
+    neg = link_scores(hidden, neg_edges)
+    return (jnp.mean(jax.nn.softplus(-pos)) + jnp.mean(jax.nn.softplus(neg)))
+
+
+def hits_at_k(pos_scores, neg_scores, k: int) -> float:
+    """OGB hits@K: fraction of positives ranked above the K-th negative."""
+    import numpy as np
+    neg = np.sort(np.asarray(neg_scores))[::-1]
+    thresh = neg[min(k, len(neg)) - 1]
+    return float((np.asarray(pos_scores) > thresh).mean())
+
+
+def accuracy(logits, labels) -> float:
+    import numpy as np
+    return float((np.asarray(jnp.argmax(logits, -1)) == np.asarray(labels)).mean())
+
+
+def hit_rate_at_k(logits, labels, k: int) -> float:
+    """§5.3 hit@k: label within top-k predicted categories."""
+    import numpy as np
+    topk = np.asarray(jax.lax.top_k(logits, k)[1])
+    return float((topk == np.asarray(labels)[:, None]).any(axis=1).mean())

@@ -1,0 +1,460 @@
+"""Decoder-LM family covering all assigned architectures via LMConfig:
+
+  dense / audio / vlm : [RMSNorm→GQA-attn] + [RMSNorm→MLP]        (scan)
+  moe                 : [RMSNorm→GQA-attn] + [RMSNorm→MoE]        (scan)
+  ssm                 : [RMSNorm→Mamba2-SSD]                      (scan)
+  hybrid (zamba2)     : groups of `attn_every` mamba layers, each group
+                        followed by ONE SHARED transformer block (weights
+                        re-used at every call site, per-site KV caches)
+
+The input embedding is the paper's compressed embedding whenever
+``cfg.embedding.kind != 'dense'`` — the framework's first-class feature.
+Homogeneous stacks are `lax.scan`s over stacked params (compile-time + remat
+control); decode threads per-layer KV/SSM caches through the scans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding as emb_lib
+from repro.nn import module as nn
+from repro.nn.attention import AttentionConfig, attention, init_attention
+from repro.nn.kvcache import KVCache
+from repro.nn.layers import init_mlp, init_norm, mlp, norm
+from repro.nn.moe import MoEConfig, init_moe, moe_dense_ffn, moe_ffn_ep
+from repro.nn.rope import default_positions, rope_cos_sin
+from repro.nn.ssm import SSMConfig, init_ssm, ssm_forward
+from repro.nn.kvcache import SSMCache
+from repro.configs.base import LMConfig
+from repro.parallel.sharding import logical
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# config adapters
+# ---------------------------------------------------------------------------
+
+def attn_config(cfg: LMConfig) -> AttentionConfig:
+    return AttentionConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim, qkv_bias=cfg.qkv_bias, impl=cfg.attn_impl,
+    )
+
+
+def moe_config(cfg: LMConfig) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.moe_top_k, n_experts_padded=cfg.n_experts_padded,
+        capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+        impl=cfg.moe_impl,
+    )
+
+
+def ssm_config(cfg: LMConfig) -> SSMConfig:
+    return SSMConfig(
+        d_model=cfg.d_model, d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+        expand=cfg.ssm_expand, chunk=cfg.ssm_chunk,
+    )
+
+
+def _n_attn_sites(cfg: LMConfig) -> int:
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return 0
+
+
+def _n_ssm_layers(cfg: LMConfig) -> int:
+    return cfg.n_layers if cfg.family in ("ssm", "hybrid") else 0
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LMCache:
+    pos: Array                       # scalar int32
+    kv_k: Optional[Array] = None     # (sites, B, S_max, K, Dh)
+    kv_v: Optional[Array] = None
+    ssm_state: Optional[Array] = None  # (ssm_layers, B, H, N, P)
+    conv: Optional[Array] = None       # (ssm_layers, B, W-1, C)
+
+    def tree_flatten(self):
+        return (self.pos, self.kv_k, self.kv_v, self.ssm_state, self.conv), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, leaves):
+        return cls(*leaves)
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> LMCache:
+    sites = _n_attn_sites(cfg)
+    nssm = _n_ssm_layers(cfg)
+    kv_k = kv_v = ssm_state = conv = None
+    if sites:
+        shape = (sites, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        kv_k = jnp.zeros(shape, dtype)
+        kv_v = jnp.zeros(shape, dtype)
+    if nssm:
+        scfg = ssm_config(cfg)
+        ssm_state = jnp.zeros(
+            (nssm, batch, scfg.n_heads, scfg.d_state, scfg.headdim), jnp.float32)
+        conv = jnp.zeros(
+            (nssm, batch, scfg.conv_width - 1, scfg.conv_channels), dtype)
+    return LMCache(pos=jnp.zeros((), jnp.int32), kv_k=kv_k, kv_v=kv_v,
+                   ssm_state=ssm_state, conv=conv)
+
+
+def cache_shardings(cfg: LMConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """Logical shardings for every cache leaf (used by dryrun in/out specs)."""
+    from repro.parallel.sharding import logical_sharding
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, s_max, dtype))
+    names = {
+        "kv": (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+        "ssm": (None, "batch", "ssm_heads", "ssm_state", None),
+        "conv": (None, "batch", None, "d_ff"),
+    }
+    def shard_of(leaf, kind):
+        return logical_sharding(leaf.shape, *names[kind])
+    return LMCache(
+        pos=None,
+        kv_k=shard_of(cache.kv_k, "kv") if cache.kv_k is not None else None,
+        kv_v=shard_of(cache.kv_v, "kv") if cache.kv_v is not None else None,
+        ssm_state=shard_of(cache.ssm_state, "ssm") if cache.ssm_state is not None else None,
+        conv=shard_of(cache.conv, "conv") if cache.conv is not None else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: LMConfig) -> nn.Params:
+    ks = nn.split_keys(key, ["n1", "attn", "n2", "ffn"])
+    p = {
+        "norm1": init_norm(ks["n1"], cfg.d_model, cfg.norm),
+        "attn": init_attention(ks["attn"], attn_config(cfg)),
+        "norm2": init_norm(ks["n2"], cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks["ffn"], moe_config(cfg))
+    else:
+        p["mlp"] = init_mlp(ks["ffn"], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def attn_block(p, x: Array, cfg: LMConfig, cos, sin,
+               kv: Optional[KVCache] = None) -> Tuple[Array, Optional[KVCache]]:
+    h, kv = attention(p["attn"], norm(p["norm1"], x, cfg.norm), attn_config(cfg),
+                      cos=cos, sin=sin, cache=kv)
+    x = x + h
+    x = logical(x, "batch", "seq", "embed")
+    h2 = norm(p["norm2"], x, cfg.norm)
+    if cfg.family == "moe":
+        B, S, D = h2.shape
+        mcfg = moe_config(cfg)
+        fn = moe_dense_ffn if mcfg.impl == "dense" else moe_ffn_ep
+        y = fn(p["moe"], h2.reshape(B * S, D), mcfg)
+        y = y.reshape(B, S, D)
+    else:
+        y = mlp(p["mlp"], h2, cfg.act)
+    x = x + y
+    return logical(x, "batch", "seq", "embed"), kv
+
+
+def init_ssm_block(key, cfg: LMConfig) -> nn.Params:
+    ks = nn.split_keys(key, ["n1", "ssm"])
+    return {
+        "norm1": init_norm(ks["n1"], cfg.d_model, cfg.norm),
+        "ssm": init_ssm(ks["ssm"], ssm_config(cfg)),
+    }
+
+
+def ssm_block(p, x: Array, cfg: LMConfig,
+              cache: Optional[SSMCache] = None) -> Tuple[Array, Optional[SSMCache]]:
+    h, cache = ssm_forward(p["ssm"], norm(p["norm1"], x, cfg.norm),
+                           ssm_config(cfg), cache=cache)
+    return logical(x + h, "batch", "seq", "embed"), cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: LMConfig, codes: Optional[Array] = None,
+            aux=None) -> nn.Params:
+    """codes: precomputed packed compositional codes for the vocabulary
+    (from the data pipeline's co-occurrence pass); aux: auxiliary matrix to
+    encode from if codes is None.  Falls back to random codes (≡ ALONE) when
+    neither is given — the launcher wires the real encode."""
+    ks = nn.split_keys(key, ["embed", "blocks", "shared", "tail", "fnorm", "head", "pos"])
+    ecfg = cfg.embedding_config()
+    if ecfg.is_compressed and codes is None and aux is None:
+        codes = emb_lib.make_codes(
+            jax.random.fold_in(ks["embed"], 1),
+            dataclasses.replace(ecfg, kind="random_full"), None)
+    n_emb_entities = ecfg.n_entities * (cfg.n_codebooks if cfg.input_mode == "audio_tokens" else 1)
+    ecfg_n = dataclasses.replace(ecfg, n_entities=n_emb_entities)
+    if codes is not None and ecfg.is_compressed and codes.shape[0] != n_emb_entities:
+        reps = -(-n_emb_entities // codes.shape[0])
+        codes = jnp.tile(codes, (reps, 1))[:n_emb_entities]
+    params: nn.Params = {
+        "embed": emb_lib.init_embedding(ks["embed"], ecfg_n, codes=codes, aux=aux),
+        "final_norm": init_norm(ks["fnorm"], cfg.d_model, cfg.norm),
+    }
+    head_out = cfg.vocab_padded * (cfg.n_codebooks if cfg.input_mode == "audio_tokens" else 1)
+    params["head"] = nn.dense_init(ks["head"], (cfg.d_model, head_out))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        keys = jax.random.split(ks["blocks"], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: init_attn_block(k, cfg))(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(ks["blocks"], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: init_ssm_block(k, cfg))(keys)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers % cfg.attn_every
+        gkeys = jax.random.split(ks["blocks"], groups * cfg.attn_every)
+        gkeys = gkeys.reshape(groups, cfg.attn_every, 2)
+        params["blocks"] = jax.vmap(jax.vmap(lambda k: init_ssm_block(k, cfg)))(gkeys)
+        params["shared"] = init_attn_block(ks["shared"], cfg)   # ONE shared block
+        if rem:
+            tkeys = jax.random.split(ks["tail"], rem)
+            params["tail"] = jax.vmap(lambda k: init_ssm_block(k, cfg))(tkeys)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _sinusoidal_pe(positions: Array, d: int, dtype) -> Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _embed_tokens(params, tokens: Array, cfg: LMConfig, positions) -> Array:
+    ecfg = cfg.embedding_config()
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "audio_tokens":
+        B, S, nq = tokens.shape
+        flat_ids = tokens + (jnp.arange(nq, dtype=tokens.dtype) * cfg.vocab_padded)
+        ecfg_n = dataclasses.replace(ecfg, n_entities=cfg.vocab_padded * nq)
+        x = emb_lib.embed_lookup(params["embed"], flat_ids, ecfg_n).sum(axis=2)
+    else:
+        x = emb_lib.embed_lookup(params["embed"], tokens, ecfg)
+    x = x.astype(dtype)
+    if cfg.rope_variant == "none":
+        pos = positions if positions.ndim == 2 else positions[0]
+        x = x + _sinusoidal_pe(pos, cfg.d_model, dtype)
+    return logical(x, "batch", "seq", "embed")
+
+
+def _rope(cfg: LMConfig, positions) -> Tuple[Optional[Array], Optional[Array]]:
+    if cfg.rope_variant == "none" or not cfg.n_heads:
+        return None, None
+    frac = 0.5 if cfg.rope_variant == "half" else 1.0
+    sections = cfg.mrope_sections if cfg.rope_variant == "mrope" else None
+    return rope_cos_sin(positions, cfg.head_dim, theta=cfg.rope_theta,
+                        fraction=frac, mrope_sections=sections)
+
+
+def _maybe_ckpt(fn, cfg: LMConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan(body, init, xs, cfg: LMConfig):
+    """lax.scan with optional full unroll (dry-run cost-analysis mode:
+    XLA's HloCostAnalysis does not weight while-loop bodies by trip count,
+    so roofline lowering unrolls the homogeneous stacks)."""
+    return jax.lax.scan(body, init, xs, unroll=True if cfg.unroll_scan else 1)
+
+
+def lm_forward(
+    params: nn.Params,
+    tokens: Array,
+    cfg: LMConfig,
+    cache: Optional[LMCache] = None,
+    positions: Optional[Array] = None,
+    return_hidden: bool = False,
+) -> Tuple[Array, Optional[LMCache]]:
+    """tokens (B,S[,nq]) int32 -> logits (B,S,Vpad[,nq]) f32.
+
+    cache=None: train/prefill-from-zero (causal over S).
+    cache!=None: decode/chunked-prefill at offset cache.pos."""
+    B, S = tokens.shape[:2]
+    offset = cache.pos if cache is not None else 0
+    if positions is None:
+        positions = default_positions(B, S, cfg.rope_variant)
+        positions = positions + offset
+    cos, sin = _rope(cfg, positions)
+
+    x = _embed_tokens(params, tokens, cfg, positions)
+
+    new_cache = None
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cache is None:
+            def body(h, lp):
+                h, _ = attn_block(lp, h, cfg, cos, sin)
+                return h, None
+            x, _ = _scan(_maybe_ckpt(body, cfg), x, params["blocks"], cfg)
+        else:
+            def body(h, inp):
+                lp, k_sl, v_sl = inp
+                kv = KVCache(k_sl, v_sl, cache.pos)
+                h, kv = attn_block(lp, h, cfg, cos, sin, kv=kv)
+                return h, (kv.k, kv.v)
+            x, (nk, nv) = _scan(body, x, (params["blocks"], cache.kv_k, cache.kv_v), cfg)
+            new_cache = LMCache(pos=cache.pos + S, kv_k=nk, kv_v=nv)
+
+    elif cfg.family == "ssm":
+        if cache is None:
+            def body(h, lp):
+                h, _ = ssm_block(lp, h, cfg)
+                return h, None
+            x, _ = _scan(_maybe_ckpt(body, cfg), x, params["blocks"], cfg)
+        else:
+            def body(h, inp):
+                lp, st, cv = inp
+                sc = SSMCache(st, cv)
+                h, sc = ssm_block(lp, h, cfg, cache=sc)
+                return h, (sc.state, sc.conv)
+            x, (ns, ncv) = _scan(body, x, (params["blocks"], cache.ssm_state, cache.conv), cfg)
+            new_cache = LMCache(pos=cache.pos + S, ssm_state=ns, conv=ncv)
+
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers % cfg.attn_every
+        shared = params["shared"]
+        if cache is None:
+            def inner(h, lp):
+                h, _ = ssm_block(lp, h, cfg)
+                return h, None
+            # nested remat: the outer checkpoint alone keeps a whole
+            # 6-layer group's SSD internals live during its backward
+            # (~6 GB/chip at zamba2 train_4k); per-layer checkpointing
+            # inside the group bounds live internals to one layer.
+            def outer(h, gp):
+                h, _ = _scan(_maybe_ckpt(inner, cfg), h, gp, cfg)
+                h, _ = attn_block(shared, h, cfg, cos, sin)   # shared weights
+                return h, None
+            x, _ = _scan(_maybe_ckpt(outer, cfg), x, params["blocks"], cfg)
+            if rem:
+                x, _ = _scan(_maybe_ckpt(inner, cfg), x, params["tail"], cfg)
+        else:
+            g_ssm = cache.ssm_state[: groups * cfg.attn_every].reshape(
+                (groups, cfg.attn_every) + cache.ssm_state.shape[1:])
+            g_conv = cache.conv[: groups * cfg.attn_every].reshape(
+                (groups, cfg.attn_every) + cache.conv.shape[1:])
+            def inner(h, inp):
+                lp, st, cv = inp
+                sc = SSMCache(st, cv)
+                h, sc = ssm_block(lp, h, cfg, cache=sc)
+                return h, (sc.state, sc.conv)
+            def outer(h, inp):
+                gp, st_g, cv_g, k_sl, v_sl = inp
+                h, (ns, ncv) = _scan(inner, h, (gp, st_g, cv_g), cfg)
+                kv = KVCache(k_sl, v_sl, cache.pos)
+                h, kv = attn_block(shared, h, cfg, cos, sin, kv=kv)
+                return h, (ns, ncv, kv.k, kv.v)
+            x, (ns_g, ncv_g, nk, nv) = _scan(
+                outer, x, (params["blocks"], g_ssm, g_conv, cache.kv_k, cache.kv_v), cfg)
+            ns = ns_g.reshape((groups * cfg.attn_every,) + ns_g.shape[2:])
+            ncv = ncv_g.reshape((groups * cfg.attn_every,) + ncv_g.shape[2:])
+            if rem:
+                x, (ns_t, ncv_t) = _scan(
+                    inner, x,
+                    (params["tail"], cache.ssm_state[-rem:], cache.conv[-rem:]), cfg)
+                ns = jnp.concatenate([ns, ns_t], axis=0)
+                ncv = jnp.concatenate([ncv, ncv_t], axis=0)
+            new_cache = LMCache(pos=cache.pos + S, kv_k=nk, kv_v=nv,
+                                ssm_state=ns, conv=ncv)
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, new_cache
+    head = params["head"].astype(x.dtype)
+    logits = (x @ head).astype(jnp.float32)
+    logits = logical(logits, "batch", "seq", "vocab")
+    if cfg.input_mode == "audio_tokens":
+        logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab_padded)
+    return logits, new_cache
+
+
+def _chunked_ce(x: Array, head: Array, labels: Array, cfg: LMConfig) -> Array:
+    """Cross-entropy without materialising (B,S,Vpad) logits.
+
+    Streams the head matmul in vocab chunks, carrying running (max,
+    sum-exp, gold-logit) — the production memory trick for large-vocab
+    models (yi/qwen2-vl/internlm2 save 2-3 GiB/chip at train_4k; §Perf G9).
+    The pad columns fall in the final chunk and are masked there.
+    """
+    chunk = cfg.loss_vocab_chunk
+    vpad = cfg.vocab_padded
+    assert vpad % chunk == 0
+    nch = vpad // chunk
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    lab = labels.reshape(B * S)
+    head_c = head.reshape(D, nch, chunk)   # chunk view (no copy under XLA)
+
+    def body(carry, i):
+        m_prev, s_prev, gold_prev = carry
+        hc = jax.lax.dynamic_index_in_dim(head_c, i, axis=1, keepdims=False)
+        logits = (xf @ hc.astype(xf.dtype)).astype(jnp.float32)   # (T, chunk)
+        col = i * chunk + jnp.arange(chunk)
+        logits = jnp.where(col[None, :] >= cfg.vocab_size, -1e30, logits)
+        m_c = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_c)
+        s_new = (s_prev * jnp.exp(m_prev - m_new)
+                 + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1))
+        in_chunk = (lab >= i * chunk) & (lab < (i + 1) * chunk)
+        local = jnp.clip(lab - i * chunk, 0, chunk - 1)
+        gold_c = jnp.take_along_axis(logits, local[:, None], axis=1)[:, 0]
+        gold_new = jnp.where(in_chunk, gold_c, gold_prev)
+        return (m_new, s_new, gold_new), None
+
+    init = (jnp.full((B * S,), -1e30, jnp.float32),
+            jnp.zeros((B * S,), jnp.float32),
+            jnp.zeros((B * S,), jnp.float32))
+    (m, s_sum, gold), _ = jax.lax.scan(
+        jax.checkpoint(body), init, jnp.arange(nch))
+    logz = m + jnp.log(s_sum)
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(params, batch: Dict[str, Array], cfg: LMConfig) -> Array:
+    """Next-token cross-entropy; vocab padding masked out of the softmax."""
+    if cfg.loss_vocab_chunk and cfg.input_mode != "audio_tokens" \
+            and cfg.vocab_padded % cfg.loss_vocab_chunk == 0:
+        x, _ = lm_forward(params, batch["tokens"], cfg,
+                          positions=batch.get("positions"), return_hidden=True)
+        return _chunked_ce(x, params["head"], batch["labels"], cfg)
+    logits, _ = lm_forward(params, batch["tokens"], cfg,
+                           positions=batch.get("positions"))
+    labels = batch["labels"]
+    vpad = cfg.vocab_padded
+    if cfg.vocab_size != vpad:
+        pad_mask = jnp.arange(vpad) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits) if cfg.input_mode != "audio_tokens" \
+            else jnp.where(pad_mask[None, None, None], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,4 @@
+from repro.nn import module
+from repro.nn.module import param_count, param_bytes, dense_init, zeros_init
+
+__all__ = ["module", "param_count", "param_bytes", "dense_init", "zeros_init"]

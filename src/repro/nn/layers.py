@@ -1,0 +1,101 @@
+"""Basic layers: Linear, RMSNorm, LayerNorm, gated/plain MLPs."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+from repro.parallel.sharding import logical
+
+Array = jnp.ndarray
+
+
+# ---- linear ---------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False) -> nn.Params:
+    p = {"w": nn.dense_init(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(params: nn.Params, x: Array, dtype=None) -> Array:
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+    y = x @ w
+    if "b" in params:
+        b = params["b"].astype(y.dtype)
+        y = y + b
+    return y
+
+
+# ---- norms ----------------------------------------------------------------
+
+def init_rmsnorm(_key, d: int) -> nn.Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: nn.Params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def init_layernorm(_key, d: int) -> nn.Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params: nn.Params, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def init_norm(key, d: int, kind: str) -> nn.Params:
+    return init_layernorm(key, d) if kind == "layernorm" else init_rmsnorm(key, d)
+
+
+def norm(params: nn.Params, x: Array, kind: str) -> Array:
+    return layernorm(params, x) if kind == "layernorm" else rmsnorm(params, x)
+
+
+# ---- MLPs -----------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu") -> nn.Params:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": nn.dense_init(ks[0], (d_model, d_ff)),
+            "w_up": nn.dense_init(ks[1], (d_model, d_ff)),
+            "w_down": nn.dense_init(ks[2], (d_ff, d_model)),
+        }
+    return {
+        "w_up": nn.dense_init(ks[0], (d_model, d_ff)),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": nn.dense_init(ks[1], (d_ff, d_model)),
+        "b_down": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def mlp(params: nn.Params, x: Array, act: str = "swiglu") -> Array:
+    dt = x.dtype
+    lead = ("batch",) + (None,) * (x.ndim - 2)   # (B, S, ·) activations
+    if act == "swiglu":
+        g = x @ params["w_gate"].astype(dt)
+        u = x @ params["w_up"].astype(dt)
+        h = jax.nn.silu(g) * u
+        h = logical(h, *lead, "d_ff")
+        return h @ params["w_down"].astype(dt)
+    h = x @ params["w_up"].astype(dt) + params["b_up"].astype(dt)
+    h = jax.nn.gelu(h)
+    h = logical(h, *lead, "d_ff")
+    return h @ params["w_down"].astype(dt) + params["b_down"].astype(dt)

@@ -1,0 +1,91 @@
+"""Minimal functional module conventions.
+
+Parameters are nested dicts of jnp arrays (a pytree).  Every layer exposes
+``init_<layer>(key, cfg...) -> params`` and ``<layer>(params, x, ...) -> y``.
+No mutable module objects: this keeps pjit/shard_map, scan-over-layers and
+checkpoint resharding trivial.
+
+Conventions
+-----------
+* non-trainable buffers live under keys ending in ``_buf`` (the optimizer
+  masks them out; see ``trainable_mask``) — e.g. packed compositional codes,
+  frozen codebooks of the *light* decoder.
+* compute dtype is controlled by the caller (bf16 activations typical);
+  params are stored f32 ("master" copies) and cast at use sites.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, shape, *, scale: Optional[float] = None, dtype=jnp.float32):
+    """LeCun-normal (fan-in) initialisation by default."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def embed_init(key, shape, *, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def param_count(params: Params, trainable_only: bool = False) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if trainable_only and _path_is_buffer(path):
+            continue
+        total += leaf.size
+    return total
+
+
+def param_bytes(params: Params, trainable_only: bool = False) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if trainable_only and _path_is_buffer(path):
+            continue
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _path_is_buffer(path) -> bool:
+    for p in path:
+        k = getattr(p, "key", None)
+        if isinstance(k, str) and k.endswith("_buf"):
+            return True
+    return False
+
+
+def trainable_mask(params: Params) -> Params:
+    """True for trainable leaves, False for ``*_buf`` buffers and integer
+    leaves.  Shape-compatible pytree for the optimizer."""
+    def mask_leaf(path, leaf):
+        if _path_is_buffer(path):
+            return False
+        return jnp.issubdtype(leaf.dtype, jnp.floating)
+    return jax.tree_util.tree_map_with_path(mask_leaf, params)
+
+
+def cast_floats(tree: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,72 @@
+"""Rotary position embeddings: standard, partial (chatglm3 "2d"), and
+multimodal M-RoPE (qwen2-vl).
+
+All variants share the rotate-half convention over the *rotated fraction* of
+head dims.  ``positions`` is int32:
+  standard / partial : (B, S)
+  mrope              : (3, B, S) — temporal / height / width streams; head-dim
+                       frequency bands are split into ``mrope_sections`` and
+                       each band reads its own stream (arXiv:2409.12191).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _freqs(d_rot: int, theta: float, dtype=jnp.float32) -> Array:
+    return 1.0 / theta ** (jnp.arange(0, d_rot, 2, dtype=dtype) / d_rot)  # (d_rot/2,)
+
+
+def rope_cos_sin(
+    positions: Array,
+    d_head: int,
+    *,
+    theta: float = 10000.0,
+    fraction: float = 1.0,
+    mrope_sections: Optional[Sequence[int]] = None,
+) -> Tuple[Array, Array]:
+    """Returns (cos, sin) of shape (B, S, d_rot/2) in f32."""
+    d_rot = int(d_head * fraction) // 2 * 2
+    inv = _freqs(d_rot, theta)                                   # (d_rot/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv     # (B, S, d_rot/2)
+    else:
+        if sum(mrope_sections) != d_rot // 2:
+            raise ValueError(f"mrope sections {mrope_sections} != d_rot/2 {d_rot//2}")
+        ang_all = positions[..., None].astype(jnp.float32) * inv  # (3, B, S, d_rot/2)
+        pieces = []
+        start = 0
+        for sec_idx, sec in enumerate(mrope_sections):
+            pieces.append(ang_all[sec_idx, :, :, start: start + sec])
+            start += sec
+        ang = jnp.concatenate(pieces, axis=-1)                   # (B, S, d_rot/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B, S, H, d_head); rotates the first 2*cos.shape[-1] dims."""
+    d_rot = 2 * cos.shape[-1]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    out = jnp.concatenate([r1, r2], axis=-1)
+    if xp.shape[-1]:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+def default_positions(batch: int, seq: int, variant: str) -> Array:
+    """Text-only position ids (the VLM/audio frontends are stubs; their
+    position streams coincide with the temporal stream)."""
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if variant == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compress import compress_gradients_int8, decompress_gradients_int8
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "cosine_schedule", "linear_warmup_cosine",
+    "compress_gradients_int8", "decompress_gradients_int8",
+]

@@ -1,0 +1,91 @@
+"""AdamW (Loshchilov & Hutter 2018) implemented from scratch.
+
+Paper settings: lr=1e-3/1e-2, β1=0.9, β2=0.999, wd=0.01/0 (PyTorch defaults
+— §5.1.2/§C.1/§5.3.2).  Decoupled weight decay; optional global-norm clip;
+buffer leaves (``*_buf``) and non-float leaves are masked out, so packed
+compositional codes and frozen codebooks ride along in the param pytree
+without optimizer state or updates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import trainable_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = None
+    moments_dtype: str = "float32"   # "bfloat16" halves optimizer HBM (dbrx)
+
+
+def adamw_init(params, moments_dtype=jnp.float32) -> dict:
+    mask = trainable_mask(params)
+
+    def zeros_like_masked(p, m):
+        return jnp.zeros_like(p, dtype=moments_dtype) if m else None
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros_like_masked, params, mask),
+        "nu": jax.tree.map(zeros_like_masked, params, mask),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+              if x is not None and jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state).  ``lr_scale`` multiplies cfg.lr
+    (schedule output)."""
+    mask = trainable_mask(params)
+    step = state["step"] + 1
+    lr = cfg.lr * lr_scale
+
+    if cfg.clip_norm is not None:
+        masked_grads = jax.tree.map(lambda g, m: g if m else None, grads, mask)
+        gn = global_norm(masked_grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    else:
+        scale = jnp.asarray(1.0, jnp.float32)
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu, m):
+        if not m:
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mdt = mu.dtype
+        mu = (cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g)
+        nu = (cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g)
+        mu_hat = mu / b1t
+        nu_hat = nu / b2t
+        newp = p - lr * (mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p)
+        return newp.astype(p.dtype), mu.astype(mdt), nu.astype(mdt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_m = treedef.flatten_up_to(mask)
+
+    out = [upd(p, g, mu, nu, m)
+           for p, g, mu, nu, m in zip(flat_p, flat_g, flat_mu, flat_nu, flat_m)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}

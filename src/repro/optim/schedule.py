@@ -1,0 +1,23 @@
+"""Learning-rate schedules (return multiplicative scale for AdamWConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(step):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+
+def cosine_schedule(step, total_steps: int, final_frac: float = 0.1):
+    t = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return final_frac + (1 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(warmup_steps, 1)  # step 0 trains too
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)

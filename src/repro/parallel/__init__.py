@@ -1,0 +1,13 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    use_sharding,
+    logical,
+    logical_sharding,
+    current_mesh,
+)
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "use_sharding", "logical",
+    "logical_sharding", "current_mesh",
+]

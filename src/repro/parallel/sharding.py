@@ -1,0 +1,154 @@
+"""Logical-axis sharding rules (DESIGN.md §6).
+
+Model code annotates tensors with *logical* axis names
+(``logical(x, "batch", "seq", "embed")``); the active ``ShardingRules`` maps
+logical names to mesh axes.  Outside a ``use_sharding`` context every
+annotation is a no-op, so the same model code runs single-device tests and
+512-chip dry-runs unchanged.
+
+Divisibility guard: a logical axis only binds to its mesh axes if the tensor
+dimension is divisible by the mesh-axis-product; otherwise that dimension is
+replicated (e.g. chatglm3's 2 KV heads on a 16-way model axis — standard
+practice is KV replication when kv_heads < TP degree).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, MeshAxes]
+
+    def resolve(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        return self.rules.get(name)
+
+
+# DP over (pod, data); TP/EP over model; SP (long-context cache) over data.
+DEFAULT_RULES = ShardingRules(rules={
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": None,
+    "kv_seq": None,        # overridden to "data" for long-context decode (SP)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "vocab": "model",
+    "ssm_heads": "model",
+    "ssm_inner": "model",   # d_inner sharded on SSD-head boundaries
+    "ssm_state": None,
+    "fsdp": "data",        # parameter/optimizer-state sharding axis (ZeRO)
+    "codebook": None,      # hash-decoder codebooks: replicated (tiny)
+    "entities": None,      # packed code rows
+})
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: ShardingRules = DEFAULT_RULES
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
+    prev = (_STATE.mesh, _STATE.rules)
+    _STATE.mesh = mesh
+    _STATE.rules = rules or DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def current_rules() -> ShardingRules:
+    return _STATE.rules
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _spec_for(shape: Sequence[int], names: Sequence[Optional[str]]) -> Optional[P]:
+    mesh = _STATE.mesh
+    if mesh is None:
+        return None
+    rules = _STATE.rules
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        axes = rules.resolve(name)
+        if axes is None:
+            parts.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        # skip axes already used by an earlier dim or absent from the mesh
+        ax_tuple = tuple(a for a in ax_tuple if a in mesh.shape and a not in used)
+        # greedy fallback: drop leading axes until the product divides the
+        # dim (e.g. batch 256 on a 512-chip (pod,data,model) DP binding
+        # sheds "pod" and shards over (data, model))
+        while ax_tuple:
+            size = 1
+            for a in ax_tuple:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                break
+            ax_tuple = ax_tuple[1:]
+        if not ax_tuple:
+            parts.append(None)
+            continue
+        used.update(ax_tuple)
+        parts.append(ax_tuple[0] if len(ax_tuple) == 1 else ax_tuple)
+    return P(*parts)
+
+
+def logical_sharding(shape: Sequence[int], *names: Optional[str]) -> Optional[NamedSharding]:
+    """NamedSharding for a logical shape, or None when no mesh is active."""
+    if len(names) != len(shape):
+        raise ValueError(f"{len(names)} names for rank-{len(shape)} shape")
+    spec = _spec_for(shape, names)
+    if spec is None:
+        return None
+    return NamedSharding(_STATE.mesh, spec)
+
+
+def logical(x, *names: Optional[str]):
+    """Annotate array ``x`` with logical axis names (no-op without a mesh)."""
+    s = logical_sharding(x.shape, *names)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

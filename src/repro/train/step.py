@@ -1,0 +1,124 @@
+"""Train / prefill / serve step factories.
+
+``make_train_step(cfg, ocfg)`` returns a donated-state pjit-able function
+  (state, batch) -> (state, metrics)
+with: bf16 activations, f32 master params + Adam moments, allow_int grads
+(packed code buffers ride along untouched), optional global-norm clip, and
+LR schedule by step counter.
+
+``make_prefill_step`` / ``make_serve_step`` cover the inference shapes:
+prefill lowers the full-sequence forward that builds a cache; serve decodes
+one token against the cache (the dry-run's decode_* / long_* cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.lm import LMCache, init_cache, lm_forward, lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import linear_warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=lambda: AdamWConfig(
+        lr=1e-3, weight_decay=0.01, clip_norm=1.0))
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1      # gradient accumulation (activation-memory knob)
+
+
+def init_train_state(key, cfg: LMConfig, codes=None, aux=None,
+                     moments_dtype=jnp.float32) -> Dict[str, Any]:
+    from repro.models.lm import init_lm
+    params = init_lm(key, cfg, codes=codes, aux=aux)
+    return {"params": params, "opt": adamw_init(params, moments_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _grad_zeros(params):
+    from repro.nn.module import trainable_mask
+    mask = trainable_mask(params)
+    return jax.tree.map(
+        lambda p, m: jnp.zeros_like(p, dtype=jnp.float32) if m else p, params, mask)
+
+
+def _grad_add(acc, g, params):
+    from repro.nn.module import trainable_mask
+    mask = trainable_mask(params)
+    return jax.tree.map(
+        lambda a, b, m: a + b.astype(jnp.float32) if m else a, acc, g, mask)
+
+
+def _grad_scale(g, s, params):
+    from repro.nn.module import trainable_mask
+    mask = trainable_mask(params)
+    return jax.tree.map(lambda x, m: x * s if m else x, g, mask)
+
+
+def make_train_step(cfg: LMConfig, hyper: Optional[TrainHyper] = None) -> Callable:
+    hyper = hyper or TrainHyper()
+    k = max(1, hyper.microbatches)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if k == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: lm_loss(p, batch, cfg), allow_int=True)(params)
+        else:
+            # gradient accumulation over k microbatches (scan keeps one
+            # microbatch's activations alive at a time)
+            def to_mb(path, x):
+                is_positions = any(getattr(p, "key", None) == "positions" for p in path)
+                if is_positions:  # (3, B, S) -> (k, 3, B/k, S)
+                    return x.reshape((x.shape[0], k, x.shape[1] // k) + x.shape[2:]).swapaxes(0, 1)
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            mb = jax.tree_util.tree_map_with_path(to_mb, batch)
+
+            def body(carry, mbatch):
+                acc, loss_sum = carry
+                loss, g = jax.value_and_grad(
+                    lambda p: lm_loss(p, mbatch, cfg), allow_int=True)(params)
+                return (_grad_add(acc, g, params), loss_sum + loss), None
+
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (_grad_zeros(params), jnp.zeros((), jnp.float32)), mb,
+                unroll=True if cfg.unroll_scan else 1)
+            grads = _grad_scale(gsum, 1.0 / k, params)
+            loss = loss_sum / k
+        lr_scale = linear_warmup_cosine(
+            state["step"], hyper.warmup_steps, hyper.total_steps)
+        params, opt = adamw_update(params, grads, state["opt"],
+                                   hyper.optimizer, lr_scale=lr_scale)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, s_max: int) -> Callable:
+    """(params, tokens[, positions]) -> (last_logits, cache)."""
+    def prefill_step(params, batch):
+        B = batch["tokens"].shape[0]
+        cache = init_cache(cfg, B, s_max, jnp.dtype(cfg.compute_dtype))
+        logits, cache = lm_forward(params, batch["tokens"], cfg, cache=cache,
+                                   positions=batch.get("positions"))
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: LMConfig) -> Callable:
+    """(params, cache, tokens (B,1[,nq])) -> (logits, cache) — one decode step."""
+    def serve_step(params, cache: LMCache, batch):
+        logits, cache = lm_forward(params, batch["tokens"], cfg, cache=cache,
+                                   positions=batch.get("positions"))
+        return logits[:, -1], cache
+    return serve_step

@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+# device; multi-device parallelism tests run in subprocesses (test_parallel).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

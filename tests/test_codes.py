@@ -1,0 +1,60 @@
+"""Unit + property tests for the compositional-code storage layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codes
+
+CM = st.sampled_from([(2, 128), (4, 64), (16, 32), (64, 8), (256, 16), (2, 1), (8, 3)])
+
+
+def test_paper_bit_example():
+    # paper §1: [2, 0, 3, 1, 0, 1] with c=4 -> "10 00 11 01 00 01"
+    bits = codes.codes_to_bits(jnp.array([[2, 0, 3, 1, 0, 1]]), 4, 6)
+    assert "".join(str(int(b)) for b in np.asarray(bits[0])) == "100011010001"
+
+
+def test_bit_count_formula():
+    # 48 bits for (c=64, m=8) — paper §1's ALONE parametrization
+    assert codes.n_bits(64, 8) == 48
+    assert codes.n_words(64, 8) == 2
+    assert codes.code_capacity(2, 24) == 2**24
+
+
+def test_c_must_be_power_of_two():
+    with pytest.raises(ValueError):
+        codes.n_bits(3, 8)
+    with pytest.raises(ValueError):
+        codes.n_bits(1, 8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(cm=CM, n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(cm, n, seed):
+    c, m = cm
+    cds = jax.random.randint(jax.random.PRNGKey(seed), (n, m), 0, c)
+    packed = codes.pack_codes(cds, c, m)
+    assert packed.shape == (n, codes.n_words(c, m))
+    assert packed.dtype == jnp.uint32
+    back = codes.unpack_codes(packed, c, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(cds))
+
+
+@settings(max_examples=25, deadline=None)
+@given(cm=CM, n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_bits_roundtrip(cm, n, seed):
+    c, m = cm
+    cds = jax.random.randint(jax.random.PRNGKey(seed), (n, m), 0, c)
+    bits = codes.codes_to_bits(cds, c, m)
+    assert bits.shape == (n, codes.n_bits(c, m))
+    np.testing.assert_array_equal(
+        np.asarray(codes.bits_to_codes(bits, c, m)), np.asarray(cds))
+
+
+def test_collision_count():
+    arr = jnp.array([[1, 2], [1, 2], [3, 4], [1, 2]])
+    assert codes.count_collisions(arr) == 2  # two duplicates of row 0
+    assert codes.count_collisions(jnp.array([[1], [2], [3]])) == 0

@@ -1,0 +1,116 @@
+"""Decoder model + embedding layer tests (paper §3.2 semantics)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import embedding as emb
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.core.memory import decoder_param_counts
+from repro.nn.module import param_count, trainable_mask
+
+
+def _cfg(**kw):
+    base = dict(c=16, m=8, d_c=64, d_m=64, d_e=32, n_layers=3,
+                variant="full", compute_dtype="float32")
+    base.update(kw)
+    return DecoderConfig(**base)
+
+
+@pytest.mark.parametrize("variant", ["full", "light"])
+@pytest.mark.parametrize("l", [1, 2, 3, 4])
+def test_param_count_matches_paper_formula(variant, l):
+    cfg = _cfg(variant=variant, n_layers=l)
+    p = init_decoder(jax.random.PRNGKey(0), cfg)
+    # paper §3.2 counts weights only (biases excluded)
+    n_weights = sum(
+        leaf.size for path, leaf in jax.tree_util.tree_leaves_with_path(p)
+        if not any(str(getattr(k, "key", "")).startswith("b") for k in path)
+        and not any(str(getattr(k, "key", "")).endswith("_buf") for k in path)
+    )
+    trainable, frozen = decoder_param_counts(
+        cfg.c, cfg.m, cfg.d_c, cfg.d_m, cfg.d_e, l, variant)
+    assert n_weights == trainable == cfg.trainable_params()
+    assert cfg.frozen_params() == frozen
+
+
+@pytest.mark.parametrize("variant", ["full", "light"])
+def test_gather_equals_onehot(variant):
+    cfg = _cfg(variant=variant)
+    p = init_decoder(jax.random.PRNGKey(1), cfg)
+    codes = jax.random.randint(jax.random.PRNGKey(2), (64, cfg.m), 0, cfg.c)
+    a = apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="gather"))
+    b = apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="onehot"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_lookup_impl():
+    cfg = _cfg(variant="light", c=16, m=8, d_c=128)
+    p = init_decoder(jax.random.PRNGKey(1), cfg)
+    codes = jax.random.randint(jax.random.PRNGKey(2), (128, cfg.m), 0, cfg.c)
+    a = apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="gather"))
+    b = apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="pallas"),
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_decoder_deterministic_per_code(seed):
+    """Same code vector -> same embedding (the compression contract)."""
+    cfg = _cfg()
+    p = init_decoder(jax.random.PRNGKey(0), cfg)
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (8, cfg.m), 0, cfg.c)
+    dup = jnp.concatenate([codes, codes])
+    out = apply_decoder(p, dup, cfg)
+    np.testing.assert_allclose(np.asarray(out[:8]), np.asarray(out[8:]),
+                               rtol=1e-6, atol=1e-6)
+
+
+KINDS = ["dense", "hash_full", "hash_light", "random_full", "random_light"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_embedding_kinds(kind):
+    n, d_e = 300, 32
+    cfg = emb.EmbeddingConfig(kind=kind, n_entities=n, d_e=d_e, c=16, m=8,
+                              d_c=64, d_m=64, compute_dtype="float32")
+    aux = jax.random.normal(jax.random.PRNGKey(0), (n, 24))
+    p = emb.init_embedding(jax.random.PRNGKey(1), cfg, aux=aux)
+    ids = jnp.array([0, 5, 299, 5])
+    out = emb.embed_lookup(p, ids, cfg)
+    assert out.shape == (4, d_e)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(out[3]), rtol=1e-6)
+
+
+def test_trainable_state_independent_of_n():
+    """The paper's headline property: trainable params don't grow with n."""
+    def n_trainable(n):
+        cfg = emb.EmbeddingConfig(kind="random_full", n_entities=n, d_e=32,
+                                  c=16, m=8, d_c=64, d_m=64)
+        p = emb.init_embedding(jax.random.PRNGKey(0), cfg)
+        mask = trainable_mask(p)
+        return sum(l.size for l, m in zip(jax.tree.leaves(p), jax.tree.leaves(mask)) if m)
+    assert n_trainable(100) == n_trainable(10_000)
+
+
+def test_hash_requires_aux():
+    cfg = emb.EmbeddingConfig(kind="hash_full", n_entities=10, d_e=8)
+    with pytest.raises(ValueError):
+        emb.make_codes(jax.random.PRNGKey(0), cfg, None)
+
+
+def test_decode_all_blocked():
+    cfg = emb.EmbeddingConfig(kind="random_full", n_entities=100, d_e=16,
+                              c=4, m=4, d_c=32, d_m=32, compute_dtype="float32")
+    p = emb.init_embedding(jax.random.PRNGKey(0), cfg)
+    full = emb.decode_all(p, cfg, block=32)
+    assert full.shape == (100, 16)
+    one = emb.embed_lookup(p, jnp.array([37]), cfg)
+    np.testing.assert_allclose(np.asarray(full[37]), np.asarray(one[0]),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,48 @@
+"""Regenerate the EXPERIMENTS.md §Roofline tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python tools/make_report.py [results/dryrun_v2]
+                                                  [results/dryrun_final]
+Prints markdown: one row per (arch × shape × mesh) with the three terms,
+dominant bottleneck, roofline fraction, usefulness ratio, and per-device
+memory — the §Roofline tables are generated from this.
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    rows = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(p))
+        key = (r["arch"], r["shape"], r["mesh"])
+        rows[key] = r
+    return rows
+
+
+def table(d, title):
+    rows = load(d)
+    print(f"\n### {title} ({d})\n")
+    print("| arch | shape | mesh | c (s) | m (s) | x (s) | dom | frac | useful | GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        if r["status"] == "skipped":
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | skip (sub-quadratic required) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | {mesh} | FAILED | | | | | | |")
+            continue
+        ro = r["roofline"]
+        print(f"| {arch} | {shape} | {mesh} | {ro['compute_s']:.4f} | "
+              f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+              f"{ro['dominant']} | {ro['roofline_fraction']:.3f} | "
+              f"{ro['useful_ratio']:.2f} | {r['memory']['peak_est_gib']:.1f} |")
+
+
+if __name__ == "__main__":
+    dirs = sys.argv[1:] or ["results/dryrun_v2", "results/dryrun_final"]
+    for i, d in enumerate(dirs):
+        if os.path.isdir(d):
+            table(d, "baseline policy" if i == 0 else "optimized profiles")
