@@ -3,6 +3,7 @@
 # Modules (see each for the claim it validates):
 #   fig1_reconstruction  Figure 1  — coding schemes vs entity count
 #   fig3_collisions      Figure 3  — median vs zero LSH threshold
+#   sampler_pipeline     ISSUE 1   — dedup-decode rows + prefetch steps/sec
 #   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
@@ -20,6 +21,7 @@ import traceback
 MODULES = [
     "table2_4_6_memory",   # instant, exact — first
     "fig3_collisions",
+    "sampler_pipeline",
     "kernels_micro",
     "roofline_report",
     "fig1_reconstruction",

@@ -1,0 +1,127 @@
+"""Engine micro-benchmark — dedup-decode + async prefetch (ISSUE 1).
+
+Measures, on the quickstart-scale synthetic graph, the three claims the
+``repro.graph.engine`` refactor makes:
+
+  1. dedup-decode shrinks decoder rows per GraphSAGE batch from
+     B + B·f1 + B·f1·f2 to the unique-frontier count (reported as the
+     measured duplication factor);
+  2. prefetched sampling overlaps host-side numpy with the jitted train
+     step (steps/sec sync vs. prefetch);
+  3. the engine's loss trajectory matches the naive pre-refactor path on a
+     fixed seed to within numerical tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core import embedding as emb_lib
+from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import PrefetchIterator, SageBatchSource
+from repro.train.step import init_gnn_train_state, make_gnn_train_step
+
+N_NODES = 8000
+N_CLASSES = 8
+BATCH = 256
+STEPS = 40
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup():
+    adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
+                                 n_classes=N_CLASSES, homophily=0.9)
+    cfg = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                           kind="hash_full", fanout=10)
+    cfg = dataclasses.replace(
+        cfg, embedding=dataclasses.replace(cfg.embedding, c=16, m=8, d_c=64, d_m=64))
+    codes = emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj)
+    state = init_gnn_train_state(KEY, cfg, codes=codes)
+    return adj, labels, cfg, state
+
+
+def _source(adj, labels, cfg, dedup: bool) -> SageBatchSource:
+    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
+    return SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH,
+                           seed=1, dedup=dedup)
+
+
+def _run(step_fn, state, data_iter, n_steps: int):
+    state = jax.tree.map(jnp.copy, state)   # each run trains from the same init
+    jitted = jax.jit(step_fn)
+    losses, t0 = [], None
+    for i in range(n_steps):
+        batch = jax.device_put(data_iter.next_batch()) \
+            if isinstance(data_iter, SageBatchSource) else data_iter.next_batch()
+        state, metrics = jitted(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i == 4:           # skip compile steps before timing
+            t0 = time.perf_counter()
+    dt = time.perf_counter() - t0
+    return np.asarray(losses), dt / (n_steps - 5)
+
+
+def run():
+    adj, labels, cfg, state = _setup()
+    step_fn = make_gnn_train_step(cfg)
+    f1, f2 = cfg.fanouts
+    naive_rows = BATCH * (1 + f1 + f1 * f2)
+
+    # -- 1. decoded rows per batch: naive vs unique frontier ------------
+    src = _source(adj, labels, cfg, dedup=True)
+    uniq, padded = [], []
+    for _ in range(20):
+        fb = src.next_batch()["frontier"]
+        uniq.append(int(fb.n_unique))
+        padded.append(fb.unique.shape[0])
+    emit("sampler_pipeline/decode_rows", float(np.mean(padded)),
+         f"naive={naive_rows} unique={np.mean(uniq):.0f} "
+         f"dup_factor={naive_rows / np.mean(padded):.2f}x")
+
+    # -- 2. steps/sec: sync vs prefetched sampling ----------------------
+    # Context for reading the delta: prefetch hides host sampling time behind
+    # the device step, so the ceiling is sample_ms / (sample_ms + step_ms).
+    # On a CPU backend XLA already saturates the cores during the step, so
+    # the overlap win shrinks to ~breakeven; on an accelerator the host is
+    # idle during the step and the full sampling time is recovered.
+    t0 = time.perf_counter()
+    probe = _source(adj, labels, cfg, dedup=True)
+    for _ in range(20):
+        probe.next_batch()
+    emit("sampler_pipeline/host_sample", (time.perf_counter() - t0) / 20 * 1e6,
+         "host-side numpy sampling per batch")
+
+    sync_src = _source(adj, labels, cfg, dedup=True)
+    _, t_sync = _run(step_fn, state, sync_src, STEPS)
+    pf = PrefetchIterator(_source(adj, labels, cfg, dedup=True), depth=2)
+    try:
+        _, t_pf = _run(step_fn, state, pf, STEPS)
+    finally:
+        pf.close()
+    emit("sampler_pipeline/step_sync", t_sync * 1e6,
+         f"steps_per_sec={1.0 / t_sync:.1f}")
+    emit("sampler_pipeline/step_prefetch", t_pf * 1e6,
+         f"steps_per_sec={1.0 / t_pf:.1f} speedup={t_sync / t_pf:.2f}x")
+
+    # -- 3. loss-trajectory parity: engine vs pre-refactor naive path ---
+    # The forward pass is bit-identical (tests/test_engine.py); under
+    # training the two paths reduce gradients in different orders (dedup
+    # scatter-adds into unique rows), so trajectories track within float32
+    # accumulation noise rather than exactly.
+    losses_dedup, _ = _run(step_fn, state, _source(adj, labels, cfg, True), 30)
+    losses_naive, _ = _run(step_fn, state, _source(adj, labels, cfg, False), 30)
+    gaps = np.abs(losses_dedup - losses_naive)
+    emit("sampler_pipeline/loss_parity", float(gaps.max()) * 1e6,
+         f"max_abs_loss_gap={gaps.max():.3e} early_gap={gaps[:10].max():.3e} "
+         f"final_loss={losses_dedup[-1]:.4f}")
+    assert gaps[:10].max() < 1e-3, \
+        f"dedup trajectory diverged early from naive path: {gaps[:10].max()}"
+    assert gaps.max() < 1e-1, \
+        f"dedup trajectory diverged from naive path: {gaps.max()}"

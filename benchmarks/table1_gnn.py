@@ -19,6 +19,7 @@ from benchmarks.common import emit
 from repro.configs.paper_gnn import paper_gnn_config
 from repro.core import lsh
 from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import FullGraphBatch, GNNModel
 from repro.graph.generate import holdout_edges, train_val_test_split
 from repro.models import gnn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -52,19 +53,20 @@ def run():
     labels_j = jnp.asarray(labels)
     ocfg = AdamWConfig(lr=1e-2, weight_decay=0.0)   # paper §C.1
 
-    # ---- full-graph models ----
-    for model in ("gcn", "sgc", "gin"):
+    # ---- full-graph models (unified GNNModel API, full-graph handle) ----
+    fg = FullGraphBatch(adjn)
+    for model_name in ("gcn", "sgc", "gin"):
         for kind in KINDS:
-            cfg = _cfg(model, kind)
-            codes = _codes(kind, adj)
-            p = gnn.init_gnn(KEY, cfg, codes=codes)
+            cfg = _cfg(model_name, kind)
+            model = GNNModel(cfg)
+            p = model.init(KEY, codes=_codes(kind, adj))
             st = adamw_init(p)
 
             @jax.jit
             def step(p, st):
                 def loss_fn(p):
-                    h = gnn.fullgraph_forward(p, adjn, cfg)
-                    return gnn.node_loss(gnn.node_logits(p, h, cfg)[jnp.asarray(tr)],
+                    h = model.apply(p, fg)
+                    return gnn.node_loss(model.logits(p, h)[jnp.asarray(tr)],
                                          labels_j[jnp.asarray(tr)])
                 loss, g = jax.value_and_grad(loss_fn, allow_int=True)(p)
                 p, st = adamw_update(p, g, st, ocfg)
@@ -75,28 +77,27 @@ def run():
             for i in range(80):
                 p, st, loss = step(p, st)
                 if (i + 1) % 20 == 0:   # paper: report test acc @ best val acc
-                    h = gnn.fullgraph_forward(p, adjn, cfg)
-                    lg = gnn.node_logits(p, h, cfg)
+                    lg = model.logits(p, model.apply(p, fg))
                     va_acc = gnn.accuracy(lg[jnp.asarray(va)], labels[va])
                     if va_acc >= best_va:
                         best_va = va_acc
                         best_te = gnn.accuracy(lg[jnp.asarray(te)], labels[te])
-            emit(f"table1/{model}/{LABEL[kind]}", (time.time() - t0) / 80 * 1e6,
+            emit(f"table1/{model_name}/{LABEL[kind]}", (time.time() - t0) / 80 * 1e6,
                  f"acc={best_te:.4f}")
 
-    # ---- GraphSAGE (minibatched) ----
+    # ---- GraphSAGE (minibatched, dedup-decode frontiers) ----
     for kind in KINDS:
         cfg = _cfg("sage", kind)
-        codes = _codes(kind, adj)
-        p = gnn.init_gnn(KEY, cfg, codes=codes)
+        model = GNNModel(cfg)
+        p = model.init(KEY, codes=_codes(kind, adj))
         sampler = NeighborSampler(adj, cfg.fanouts, max_deg=32, seed=0)
         st = adamw_init(p)
 
         @jax.jit
-        def sstep(p, st, levels, y):
+        def sstep(p, st, fb, y):
             def loss_fn(p):
-                h = gnn.sage_forward(p, levels, cfg)
-                return gnn.node_loss(gnn.node_logits(p, h, cfg), y)
+                h = model.apply(p, fb)
+                return gnn.node_loss(model.logits(p, h), y)
             loss, g = jax.value_and_grad(loss_fn, allow_int=True)(p)
             p, st = adamw_update(p, g, st, ocfg)
             return p, st, loss
@@ -104,13 +105,13 @@ def run():
         t0 = time.time()
         nsteps = 0
         for epoch in range(3):
-            for levels, batch in sampler.minibatches(tr, 256):
-                p, st, _ = sstep(p, st, [jnp.asarray(l) for l in levels],
+            for fb, batch in sampler.frontier_minibatches(tr, 256):
+                p, st, _ = sstep(p, st, jax.device_put(fb),
                                  labels_j[jnp.asarray(batch)])
                 nsteps += 1
-        levels, batch = next(sampler.minibatches(te, 800, shuffle=False))
-        h = gnn.sage_forward(p, [jnp.asarray(l) for l in levels], cfg)
-        acc = gnn.accuracy(gnn.node_logits(p, h, cfg), labels[batch])
+        fb, batch = next(sampler.frontier_minibatches(te, 800, shuffle=False))
+        h = model.apply(p, jax.device_put(fb))
+        acc = gnn.accuracy(model.logits(p, h), labels[batch])
         emit(f"table1/sage/{LABEL[kind]}", (time.time() - t0) / nsteps * 1e6,
              f"acc={acc:.4f}")
 
@@ -120,16 +121,17 @@ def run():
     rng = np.random.default_rng(0)
     rid = np.asarray(train_adj.row_ids())
     cid = np.asarray(train_adj.indices)
+    fg_l = FullGraphBatch(adjn_l)
     for kind in KINDS:
         cfg = dataclasses.replace(_cfg("gcn", kind), task="link")
-        codes = _codes(kind, adj)
-        p = gnn.init_gnn(KEY, cfg, codes=codes)
+        model = GNNModel(cfg)
+        p = model.init(KEY, codes=_codes(kind, adj))
         st = adamw_init(p)
 
         @jax.jit
         def lstep(p, st, pos, neg):
             def loss_fn(p):
-                h = gnn.fullgraph_forward(p, adjn_l, cfg)
+                h = model.apply(p, fg_l)
                 return gnn.link_loss(h, pos, neg)
             loss, g = jax.value_and_grad(loss_fn, allow_int=True)(p)
             p, st = adamw_update(p, g, st, ocfg)
@@ -141,7 +143,7 @@ def run():
             pos = jnp.stack([jnp.asarray(rid[sel]), jnp.asarray(cid[sel])], 1)
             neg = jnp.asarray(rng.integers(0, N_NODES, (512, 2)))
             p, st, _ = lstep(p, st, pos, neg)
-        h = gnn.fullgraph_forward(p, adjn_l, cfg)
+        h = model.apply(p, fg_l)
         neg_eval = rng.integers(0, N_NODES, pos_eval.shape)
         hits = gnn.hits_at_k(gnn.link_scores(h, jnp.asarray(pos_eval)),
                              gnn.link_scores(h, jnp.asarray(neg_eval)), 50)

@@ -1,26 +1,36 @@
-"""End-to-end driver (paper §5.2/§5.3 scenario): GraphSAGE + hash-compressed
-node embeddings trained jointly for a few hundred steps, with checkpointing
-and auto-resume — kill it mid-run and re-run to watch it continue.
+"""End-to-end driver (paper §5.2/§5.3 scenario) on the streaming graph
+engine: GraphSAGE + hash-compressed node embeddings trained jointly with
+
+  * dedup-decode minibatches — ``SageBatchSource`` emits unique-node
+    frontiers (``repro.graph.sampler.FrontierBatch``) so the decoder runs
+    once per unique node, not once per sampled position;
+  * async prefetch — ``PrefetchIterator`` samples and ``device_put``s the
+    next batch in a background thread while the jitted step runs;
+  * the unified model API — ``GNNModel.apply(params, batch)`` +
+    ``make_gnn_train_step`` drive training through the generic
+    fault-tolerant loop (``repro.train.run_training``), so checkpointing,
+    auto-resume and straggler monitoring come for free: kill this script
+    mid-run and re-run to watch it continue from the last checkpoint.
 
 Run:  PYTHONPATH=src python examples/train_gnn_hash.py [--steps 300]
-      [--kind hash_full|random_full|dense] [--nodes 20000]
+      [--kind hash_full|random_full|dense] [--nodes 20000] [--no-prefetch]
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_gnn import paper_gnn_config
-from repro.core import lsh
+from repro.core import embedding as emb_lib
 from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import GNNModel, PrefetchIterator, SageBatchSource
 from repro.graph.generate import train_val_test_split
 from repro.models import gnn
-from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.train.checkpoint import CheckpointManager
+from repro.optim import AdamWConfig
+from repro.train import (CheckpointManager, LoopConfig, init_gnn_train_state,
+                         make_gnn_train_step, run_training)
 
 
 def main():
@@ -30,6 +40,8 @@ def main():
     ap.add_argument("--classes", type=int, default=16)
     ap.add_argument("--kind", default="hash_full")
     ap.add_argument("--ckpt-dir", default="/tmp/hashemb_gnn_run")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the async host->device pipeline")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -41,55 +53,40 @@ def main():
     cfg = paper_gnn_config("sage", n_nodes=args.nodes, n_classes=args.classes,
                            kind=args.kind, fanout=10)
     codes = None
-    if args.kind.startswith("hash"):
+    if cfg.embedding_config().is_compressed:
         t0 = time.time()
-        codes = lsh.encode_lsh(key, adj, cfg.embedding.c, cfg.embedding.m)
+        codes = emb_lib.make_codes(key, cfg.embedding_config(), aux=adj)
         print(f"[encode] Algorithm 1 in {time.time()-t0:.1f}s; "
               f"codes {tuple(codes.shape)}")
-    elif args.kind.startswith("random"):
-        codes = lsh.encode_random(key, args.nodes, cfg.embedding.c, cfg.embedding.m)
 
-    params = gnn.init_gnn(key, cfg, codes=codes)
-    opt = adamw_init(params)
-    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    state = init_gnn_train_state(key, cfg, codes=codes)
+    train_step = make_gnn_train_step(cfg, AdamWConfig(lr=1e-2, weight_decay=0.0))
+
     sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
     tr, va, te = train_val_test_split(0, args.nodes)
-    labels_j = jnp.asarray(labels)
-    ocfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    source = SageBatchSource(sampler, tr, labels, batch_size=256, seed=0)
+    data_iter = source if args.no_prefetch else PrefetchIterator(source, depth=2)
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    restored = ckpt.restore_latest(state)
-    start = 0
-    if restored:
-        start, state, _ = restored
-        print(f"[resume] from step {start}")
-
-    @jax.jit
-    def step_fn(state, levels, y):
-        def loss_fn(p):
-            h = gnn.sage_forward(p, levels, cfg)
-            return gnn.node_loss(gnn.node_logits(p, h, cfg), y)
-        loss, g = jax.value_and_grad(loss_fn, allow_int=True)(state["params"])
-        p, opt = adamw_update(state["params"], g, state["opt"], ocfg)
-        return {"params": p, "opt": opt, "step": state["step"] + 1}, loss
-
-    rng = np.random.default_rng(start)  # deterministic-per-step sampling
     t0 = time.time()
-    for step in range(start, args.steps):
-        batch = rng.choice(tr, 256, replace=False)
-        levels = [jnp.asarray(l) for l in sampler.sample(batch)]
-        state, loss = step_fn(state, levels, labels_j[jnp.asarray(batch)])
-        if step % 25 == 0:
-            print(f"[step {step:4d}] loss={float(loss):.4f} "
-                  f"({(time.time()-t0)/max(step-start,1)*1e3:.0f} ms/step)")
-        if (step + 1) % 100 == 0:
-            ckpt.save(step + 1, state)
-    ckpt.save(args.steps, state)
-    ckpt.wait()
 
-    levels, batch = next(sampler.minibatches(te, 1000, shuffle=False))
-    h = gnn.sage_forward(state["params"], [jnp.asarray(l) for l in levels], cfg)
-    acc = gnn.accuracy(gnn.node_logits(state["params"], h, cfg), labels[batch])
+    def on_metrics(step, m):
+        print(f"[step {step:4d}] loss={m['loss']:.4f} "
+              f"({m['step_time']*1e3:.0f} ms/step, ewma {m['ewma']*1e3:.0f} ms)")
+
+    res = run_training(train_step, state, data_iter,
+                       LoopConfig(total_steps=args.steps, ckpt_every=100,
+                                  log_every=25),
+                       ckpt=ckpt, on_metrics=on_metrics)
+    if res.resumed_from is not None:
+        print(f"[resume] continued from step {res.resumed_from}")
+    print(f"[train] {len(res.losses)} steps in {time.time()-t0:.1f}s "
+          f"({res.stragglers} stragglers)")
+
+    model = GNNModel(cfg)
+    fb, batch = next(sampler.frontier_minibatches(te, 1000, shuffle=False))
+    h = model.apply(res.state["params"], jax.device_put(fb))
+    acc = gnn.accuracy(model.logits(res.state["params"], h), labels[batch])
     print(f"[done] test acc = {acc:.4f}  (chance = {1/args.classes:.4f})")
 
 

@@ -23,6 +23,8 @@ class EmbeddingSpec:
     d_m: int = 512
     n_layers: int = 3         # paper §5.3: l=3, d_c=d_m=512
     lookup_impl: str = "onehot"
+    threshold: str = "median" # Algorithm-1 binarisation ("zero" = Charikar baseline)
+    hops: int = 1             # §6.1 higher-order adjacency (A^k auxiliary)
 
     def to_config(self, n_entities: int, d_e: int, compute_dtype: str) -> EmbeddingConfig:
         return EmbeddingConfig(
@@ -30,6 +32,7 @@ class EmbeddingSpec:
             c=self.c, m=self.m, d_c=self.d_c, d_m=self.d_m,
             n_layers=self.n_layers, lookup_impl=self.lookup_impl,
             compute_dtype=compute_dtype,
+            threshold=self.threshold, hops=self.hops,
         )
 
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn import module as nn
+from repro.parallel import sharding
 
 Array = jnp.ndarray
 
@@ -65,6 +66,7 @@ def init_decoder(key: jax.Array, cfg: DecoderConfig) -> nn.Params:
     ks = nn.split_keys(key, ["codebooks", "w0", "mlp"])
     params: nn.Params = {}
     cb = nn.dense_init(ks["codebooks"], (cfg.m, cfg.c, cfg.d_c), scale=1.0 / jnp.sqrt(cfg.m))
+    cb = sharding.logical(cb, None, None, "codebook")
     if cfg.variant == "light":
         params["codebooks_buf"] = cb           # frozen (stored off-accelerator in Table 2)
         params["w0"] = jnp.ones((cfg.d_c,), jnp.float32)

@@ -24,6 +24,7 @@ from repro.core import codes as codes_lib
 from repro.core import lsh
 from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
 from repro.nn import module as nn
+from repro.parallel import sharding
 
 Array = jnp.ndarray
 
@@ -42,6 +43,11 @@ class EmbeddingConfig:
     n_layers: int = 3
     lookup_impl: str = "onehot"
     compute_dtype: str = "bfloat16"
+    # Algorithm-1 encoding knobs (hash kinds only): "median" is the paper's
+    # threshold, "zero" the Charikar-LSH baseline (Fig. 3); hops>1 pushes the
+    # projection through the graph k times (§6.1 higher-order adjacency).
+    threshold: str = "median"
+    hops: int = 1
 
     @property
     def is_compressed(self) -> bool:
@@ -71,7 +77,8 @@ def make_codes(
             )
         if aux.shape[0] != cfg.n_entities:
             raise ValueError(f"aux rows {aux.shape[0]} != n_entities {cfg.n_entities}")
-        return lsh.encode_lsh(key, aux, cfg.c, cfg.m)
+        return lsh.encode_lsh(key, aux, cfg.c, cfg.m,
+                              threshold=cfg.threshold, hops=cfg.hops)
     return lsh.encode_random(key, cfg.n_entities, cfg.c, cfg.m)
 
 
@@ -91,8 +98,9 @@ def init_embedding(
     expected = (cfg.n_entities, codes_lib.n_words(cfg.c, cfg.m))
     if tuple(codes.shape) != expected:
         raise ValueError(f"codes shape {tuple(codes.shape)} != {expected}")
+    codes_buf = sharding.logical(jnp.asarray(codes, jnp.uint32), "entities", None)
     return {
-        "codes_buf": jnp.asarray(codes, jnp.uint32),
+        "codes_buf": codes_buf,
         "decoder": init_decoder(k_dec, cfg.decoder_config()),
     }
 

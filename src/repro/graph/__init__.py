@@ -5,7 +5,7 @@ from repro.graph.generate import (
     bipartite_transaction_graph,
     clustered_embeddings,
 )
-from repro.graph.sampler import NeighborSampler
+from repro.graph.sampler import FrontierBatch, NeighborSampler
 
 __all__ = [
     "CSRMatrix",
@@ -13,5 +13,6 @@ __all__ = [
     "sbm_graph",
     "bipartite_transaction_graph",
     "clustered_embeddings",
+    "FrontierBatch",
     "NeighborSampler",
 ]

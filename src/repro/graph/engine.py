@@ -1,0 +1,279 @@
+"""Streaming graph-training engine (sample → lookup → decode → train).
+
+Three pieces restructure the minibatch path end to end:
+
+* **Dedup-decode batches** — ``SageBatchSource`` emits ``FrontierBatch``es
+  (unique-node frontier + per-level int32 index maps, see
+  ``repro.graph.sampler``), so the embedding decoder runs once per unique
+  node instead of once per sampled position.
+
+* **Async prefetch** — ``PrefetchIterator`` wraps any batch source in a
+  double-buffered host→device pipeline: a background thread runs the numpy
+  sampler and ``jax.device_put``s the next batch(es) while the jitted train
+  step consumes the current one.  ``state_dict``/``load_state_dict`` are
+  forwarded with consumer-side semantics (the state of the *last consumed*
+  batch, not the last produced one), so fault-tolerant resume through
+  ``repro.train.loop.run_training`` remains exact.
+
+* **Unified model API** — ``GNNModel.apply(params, batch)`` accepts a
+  sampled ``FrontierBatch``, a naive level list, or a ``FullGraphBatch``
+  handle, collapsing the divergent ``sage_forward`` / ``fullgraph_forward``
+  entry points so training steps, benchmarks and examples stop
+  special-casing the model family.
+
+Batch sources are deterministic per step index (each batch is a pure
+function of ``(seed, step)``), which is what makes prefetching, crash
+resume and the sync/async equivalence tests exact rather than statistical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Dict, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.graph.csr import CSRMatrix
+from repro.graph.sampler import FrontierBatch, NeighborSampler
+from repro.models import gnn
+
+Batch = Union[FrontierBatch, "FullGraphBatch", Sequence[Any]]
+
+
+# ---------------------------------------------------------------------------
+# unified model API
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FullGraphBatch:
+    """Full-graph "batch": a handle on the normalised adjacency.  ``apply``
+    returns hidden states for ALL nodes (the paper trains GCN/SGC/GIN
+    without minibatches, §C.1)."""
+
+    adj: CSRMatrix
+
+    def tree_flatten(self):
+        return (self.adj,), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, leaves):
+        return cls(leaves[0])
+
+
+class GNNModel:
+    """Single entry point over the paper's GNN family.
+
+    ``apply(params, batch)`` dispatches on the batch type at trace time:
+      FrontierBatch   -> dedup-decode minibatched GraphSAGE
+      list of levels  -> naive minibatched GraphSAGE (reference path)
+      FullGraphBatch  -> full-graph GCN / SGC / GIN (or CSRMatrix directly)
+    """
+
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+
+    def init(self, key, codes=None, aux=None):
+        return gnn.init_gnn(key, self.cfg, codes=codes, aux=aux)
+
+    def apply(self, params, batch: Batch):
+        if isinstance(batch, FrontierBatch):
+            return gnn.sage_forward_frontier(params, batch, self.cfg)
+        if isinstance(batch, FullGraphBatch):
+            return gnn.fullgraph_forward(params, batch.adj, self.cfg)
+        if isinstance(batch, CSRMatrix):
+            return gnn.fullgraph_forward(params, batch, self.cfg)
+        if isinstance(batch, (list, tuple)):
+            return gnn.sage_forward(params, list(batch), self.cfg)
+        if isinstance(batch, dict):
+            return self.apply(params, batch_view(batch))
+        raise TypeError(f"GNNModel.apply: unsupported batch type {type(batch)!r}")
+
+    def logits(self, params, hidden):
+        return gnn.node_logits(params, hidden, self.cfg)
+
+
+def batch_view(batch: Dict[str, Any]) -> Batch:
+    """Extract the model-facing view from a batch dict produced by the
+    sources below ({"frontier": ...} or {"levels": ...})."""
+    if "frontier" in batch:
+        return batch["frontier"]
+    if "levels" in batch:
+        return batch["levels"]
+    raise KeyError("batch dict has neither 'frontier' nor 'levels'")
+
+
+# ---------------------------------------------------------------------------
+# batch sources (host side, deterministic per step)
+# ---------------------------------------------------------------------------
+
+def _step_rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng((seed * 1_000_003 + 12_582_917) + step)
+
+
+class SageBatchSource:
+    """Per-step GraphSAGE batch source over a node pool with labels.
+
+    Each ``next_batch`` draws ``batch_size`` nodes and samples their
+    neighbourhood with a generator seeded by ``(seed, step)`` — the batch
+    sequence is a pure function of the step counter, so ``state_dict`` is
+    just the step and resume / prefetch replay are exact.
+
+    ``dedup=True`` emits {"frontier": FrontierBatch, "labels": y};
+    ``dedup=False`` emits {"levels": tuple, "labels": y} (naive reference).
+    """
+
+    def __init__(self, sampler: NeighborSampler, nodes, labels, batch_size: int,
+                 seed: int = 0, dedup: bool = True, pad_to: int = 256):
+        self.sampler = sampler
+        self.nodes = np.asarray(nodes)
+        self.labels = np.asarray(labels)
+        self.batch_size = int(batch_size)
+        self.seed = int(seed)
+        self.dedup = dedup
+        self.pad_to = pad_to
+        self.step = 0
+
+    def next_batch(self) -> Dict[str, Any]:
+        rng = _step_rng(self.seed, self.step)
+        self.step += 1
+        replace = self.batch_size > self.nodes.shape[0]
+        ids = rng.choice(self.nodes, self.batch_size, replace=replace).astype(np.int32)
+        y = self.labels[ids].astype(np.int32)
+        if self.dedup:
+            fb = self.sampler.sample_frontier(ids, pad_to=self.pad_to, rng=rng)
+            return {"frontier": fb, "labels": y}
+        return {"levels": tuple(self.sampler.sample(ids, rng=rng)), "labels": y}
+
+    # -- checkpointable state -------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        assert int(state["seed"]) == self.seed, \
+            "restoring a sage batch source from a different run"
+        self.step = int(state["step"])
+
+
+# ---------------------------------------------------------------------------
+# async prefetch
+# ---------------------------------------------------------------------------
+
+class PrefetchIterator:
+    """Double-buffered host→device pipeline around a batch source.
+
+    A daemon thread repeatedly calls ``source.next_batch()`` and
+    ``jax.device_put``s the result, keeping up to ``depth`` batches in
+    flight, so host-side numpy sampling and the H2D copy overlap with the
+    jitted step consuming the previous batch.
+
+    Resume semantics: each queue item carries the source state captured
+    *after* producing that batch; ``state_dict()`` returns the state of the
+    last batch the consumer actually took, so a checkpoint taken after
+    consuming k batches restores to exactly batch k+1 regardless of how far
+    ahead the producer ran.
+    """
+
+    def __init__(self, source, depth: int = 2, device=None):
+        self.source = source
+        self.depth = max(1, int(depth))
+        self._device = device
+        self._lock = threading.Lock()     # serialises (re)starts vs producer
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._last_state = self._snapshot()
+        self._start()
+
+    # -- internals -------------------------------------------------------
+    def _snapshot(self):
+        if hasattr(self.source, "state_dict"):
+            return self.source.state_dict()
+        return None
+
+    def _start(self):
+        self._stop = threading.Event()
+        self._err = None
+        self._q = queue.Queue(maxsize=self.depth)
+        self._thread = threading.Thread(target=self._produce, daemon=True,
+                                        name="engine-prefetch")
+        self._thread.start()
+
+    def _produce(self):
+        stop, q = self._stop, self._q
+        try:
+            while not stop.is_set():
+                with self._lock:
+                    if stop.is_set():
+                        return
+                    batch = self.source.next_batch()
+                    state = self._snapshot()
+                batch = jax.device_put(batch, self._device)
+                item = (batch, state)
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+
+    # -- consumer API ----------------------------------------------------
+    def next_batch(self):
+        if self._thread is None:    # closed (e.g. by run_training): restart
+            self._start()
+        thread, q = self._thread, self._q
+        while True:
+            try:
+                batch, state = q.get(timeout=0.1)
+            except queue.Empty:
+                if self._err is not None:
+                    raise self._err
+                if thread is None or not thread.is_alive():
+                    raise RuntimeError("prefetch producer exited without a batch")
+                continue
+            self._last_state = state
+            return batch
+
+    def close(self):
+        """Stop the producer and drop any batches in flight.
+
+        Acts as a *pause* when the source is checkpointable: the source is
+        rewound to the last consumed batch, so a later ``next_batch`` (which
+        restarts the producer lazily) continues the exact sequence — callers
+        like ``run_training`` may close an iterator they don't own without
+        rendering it unusable."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        if self._last_state is not None and hasattr(self.source, "load_state_dict"):
+            self.source.load_state_dict(self._last_state)
+
+    # -- checkpointable state -------------------------------------------
+    def state_dict(self):
+        return self._last_state
+
+    def load_state_dict(self, state) -> None:
+        self.close()
+        if hasattr(self.source, "load_state_dict"):
+            self.source.load_state_dict(state)
+        self._last_state = self._snapshot()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

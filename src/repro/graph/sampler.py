@@ -9,15 +9,79 @@ yields fixed-shape device batches:
 
 Isolated nodes self-sample (pad with the node itself), matching the common
 GraphSAGE implementation behaviour.
+
+Dedup-decode frontier (``sample_frontier``): minibatches of a real graph
+contain massive node overlap across levels — hubs appear hundreds of times
+in one ``(B, f1, f2)`` tensor.  ``FrontierBatch`` carries the *unique* node
+frontier plus int32 index maps per level, so the embedding decoder runs once
+per unique node and the per-level tensors are rebuilt with cheap gathers
+(``unique[index_maps[i]] == levels[i]``).  The frontier is padded to a
+multiple of ``pad_to`` so jit sees a small, bounded set of shapes.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
 
+import jax
 import numpy as np
 
 from repro.graph.csr import CSRMatrix
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FrontierBatch:
+    """Deduplicated sampled minibatch.
+
+    ``unique``     (U_pad,) int32 — unique node ids, padded by repeating
+                   ``unique[0]`` (padding rows decode to valid embeddings
+                   that no index map points at).
+    ``index_maps`` per level, int32 indices into ``unique`` with the naive
+                   level shapes: (B,), (B, f1), (B, f1, f2), ...
+    ``n_unique``   () int32 — true unique count before padding (a leaf, not
+                   static metadata, so varying it never retriggers jit).
+    """
+
+    unique: np.ndarray
+    index_maps: Tuple[np.ndarray, ...]
+    n_unique: np.ndarray
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.unique, self.n_unique) + tuple(self.index_maps), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, leaves):
+        return cls(leaves[0], tuple(leaves[2:]), leaves[1])
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_levels(cls, levels: Sequence[np.ndarray], pad_to: int = 256) -> "FrontierBatch":
+        """Dedup a naive level list into a frontier + per-level index maps."""
+        levels = [np.asarray(l) for l in levels]
+        flat = np.concatenate([l.ravel() for l in levels])
+        uniq, inv = np.unique(flat, return_inverse=True)
+        n_unique = uniq.shape[0]
+        cap = -(-n_unique // max(pad_to, 1)) * max(pad_to, 1)
+        if cap > n_unique:
+            uniq = np.concatenate(
+                [uniq, np.full(cap - n_unique, uniq[0], uniq.dtype)])
+        maps, off = [], 0
+        for l in levels:
+            maps.append(inv[off:off + l.size].reshape(l.shape).astype(np.int32))
+            off += l.size
+        return cls(uniq.astype(np.int32), tuple(maps), np.int32(n_unique))
+
+    @property
+    def targets(self):
+        """Level-0 (target) node ids, reconstructed from the frontier."""
+        return self.unique[self.index_maps[0]]
+
+    def levels(self) -> List[np.ndarray]:
+        """Rebuild the naive level list (testing / fallback path)."""
+        return [self.unique[m] for m in self.index_maps]
 
 
 class NeighborSampler:
@@ -27,28 +91,51 @@ class NeighborSampler:
         self.max_deg = max_deg
         self.rng = np.random.default_rng(seed)
 
-    def _sample_level(self, nodes: np.ndarray, fanout: int) -> np.ndarray:
+    def _sample_level(self, nodes: np.ndarray, fanout: int,
+                      rng: Optional[np.random.Generator] = None) -> np.ndarray:
         """nodes: (...,) -> (..., fanout) sampled neighbour ids."""
+        rng = rng if rng is not None else self.rng
         flat = nodes.reshape(-1)
         deg = np.minimum(self.deg[flat], self.max_deg)
-        idx = self.rng.integers(0, np.maximum(deg, 1)[:, None], (flat.shape[0], fanout))
+        idx = rng.integers(0, np.maximum(deg, 1)[:, None], (flat.shape[0], fanout))
         nbr = self.table[flat[:, None], idx]
         # isolated nodes (-1 entries): fall back to self
         nbr = np.where(nbr < 0, flat[:, None], nbr)
         return nbr.reshape(*nodes.shape, fanout).astype(np.int32)
 
-    def sample(self, batch_nodes: np.ndarray) -> List[np.ndarray]:
-        """Returns [targets (B,), level1 (B,f1), level2 (B,f1,f2), ...]."""
+    def sample(self, batch_nodes: np.ndarray,
+               rng: Optional[np.random.Generator] = None) -> List[np.ndarray]:
+        """Returns [targets (B,), level1 (B,f1), level2 (B,f1,f2), ...].
+
+        ``rng`` overrides the sampler's stateful generator — pass a per-step
+        seeded generator to make the batch a pure function of the step index
+        (restart-safe resume, prefetch == sync determinism).
+        """
         levels = [batch_nodes.astype(np.int32)]
         cur = batch_nodes
         for f in self.fanouts:
-            cur = self._sample_level(cur, f)
+            cur = self._sample_level(cur, f, rng=rng)
             levels.append(cur)
         return levels
+
+    def sample_frontier(self, batch_nodes: np.ndarray, pad_to: int = 256,
+                        rng: Optional[np.random.Generator] = None) -> FrontierBatch:
+        """Sample and dedup in one call (the engine's fast path)."""
+        return FrontierBatch.from_levels(self.sample(batch_nodes, rng=rng), pad_to=pad_to)
 
     def minibatches(self, nodes: np.ndarray, batch_size: int, shuffle: bool = True):
         """Yield (levels, batch_node_ids); final short batch is wrapped (padded
         by resampling from the start) so shapes stay static for jit."""
+        for batch in self._batch_ids(nodes, batch_size, shuffle):
+            yield self.sample(batch), batch
+
+    def frontier_minibatches(self, nodes: np.ndarray, batch_size: int,
+                             shuffle: bool = True, pad_to: int = 256):
+        """Dedup-decode twin of ``minibatches``: yields (FrontierBatch, ids)."""
+        for batch in self._batch_ids(nodes, batch_size, shuffle):
+            yield self.sample_frontier(batch, pad_to=pad_to), batch
+
+    def _batch_ids(self, nodes: np.ndarray, batch_size: int, shuffle: bool):
         order = self.rng.permutation(nodes) if shuffle else np.asarray(nodes)
         n = order.shape[0]
         for s in range(0, n, batch_size):
@@ -56,4 +143,4 @@ class NeighborSampler:
             if batch.shape[0] < batch_size:
                 pad = order[: batch_size - batch.shape[0]]
                 batch = np.concatenate([batch, pad])
-            yield self.sample(batch), batch
+            yield batch

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import TPUCompilerParams
+
 
 def _decode_body(codes_ref, cb_ref, w0_ref, o_ref, *, c: int, m: int):
     codes = codes_ref[...]                       # (bB, m) int32
@@ -86,7 +88,7 @@ def hash_decode_fwd(
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.configs.base import GNNConfig
 from repro.core import embedding as emb_lib
 from repro.graph.csr import CSRMatrix
+from repro.graph.sampler import FrontierBatch
 from repro.nn import module as nn
+from repro.parallel import sharding
 
 Array = jnp.ndarray
 
@@ -77,13 +79,9 @@ def init_gnn(key, cfg: GNNConfig, codes: Optional[Array] = None, aux=None) -> nn
 # GraphSAGE (minibatched, Figure 4)
 # ---------------------------------------------------------------------------
 
-def sage_forward(params, levels: List[Array], cfg: GNNConfig) -> Array:
-    """levels: [targets (B,), l1 (B,f1), l2 (B,f1,f2)] node ids."""
-    ecfg = cfg.embedding_config()
-    h0 = emb_lib.embed_lookup(params["embed"], levels[0], ecfg)     # (B, de)
-    h1 = emb_lib.embed_lookup(params["embed"], levels[1], ecfg)     # (B, f1, de)
-    h2 = emb_lib.embed_lookup(params["embed"], levels[2], ecfg)     # (B, f1, f2, de)
-
+def _sage_combine(params, h0: Array, h1: Array, h2: Array) -> Array:
+    """Figure-4 aggregate/concat/linear stack on decoded level features
+    h0 (B, de), h1 (B, f1, de), h2 (B, f1, f2, de)."""
     # layer 1 (applied to targets and first neighbours)
     agg0 = h1.mean(axis=1)                                          # (B, de)
     z0 = jax.nn.relu(jnp.concatenate([agg0, h0], -1) @ params["w1"] + params["b1"])
@@ -94,6 +92,31 @@ def sage_forward(params, levels: List[Array], cfg: GNNConfig) -> Array:
     aggz = z1.mean(axis=1)                                          # (B, H)
     z = jax.nn.relu(jnp.concatenate([aggz, z0], -1) @ params["w2"] + params["b2"])
     return z
+
+
+def sage_forward(params, levels: List[Array], cfg: GNNConfig) -> Array:
+    """Naive path — levels: [targets (B,), l1 (B,f1), l2 (B,f1,f2)] node ids,
+    each decoded independently (B + B·f1 + B·f1·f2 decoder rows)."""
+    ecfg = cfg.embedding_config()
+    h0 = emb_lib.embed_lookup(params["embed"], levels[0], ecfg)     # (B, de)
+    h1 = emb_lib.embed_lookup(params["embed"], levels[1], ecfg)     # (B, f1, de)
+    h2 = emb_lib.embed_lookup(params["embed"], levels[2], ecfg)     # (B, f1, f2, de)
+    return _sage_combine(params, h0, h1, h2)
+
+
+def sage_forward_frontier(params, fb: FrontierBatch, cfg: GNNConfig) -> Array:
+    """Dedup-decode path: one ``embed_lookup`` over the unique frontier, then
+    cheap gathers rebuild the per-level tensors.  Decoder rows per batch drop
+    from B + B·f1 + B·f1·f2 to the (padded) unique-frontier count — the
+    batch's duplication factor in decode throughput."""
+    ecfg = cfg.embedding_config()
+    ids = sharding.logical(fb.unique, "frontier")
+    hu = emb_lib.embed_lookup(params["embed"], ids, ecfg)           # (U, de)
+    hu = sharding.logical(hu, "frontier", None)
+    h0 = hu[fb.index_maps[0]]                                       # (B, de)
+    h1 = hu[fb.index_maps[1]]                                       # (B, f1, de)
+    h2 = hu[fb.index_maps[2]]                                       # (B, f1, f2, de)
+    return _sage_combine(params, h0, h1, h2)
 
 
 # ---------------------------------------------------------------------------

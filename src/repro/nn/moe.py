@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.nn import module as nn
-from repro.parallel.sharding import current_mesh, current_rules, logical
+from repro.parallel.sharding import current_mesh, current_rules, logical, shard_map
 
 Array = jnp.ndarray
 
@@ -244,7 +244,7 @@ def moe_ffn_ep(params, x: Array, cfg: MoEConfig) -> Array:
 
     fn = partial(_ep_local_ffn, cfg=cfg, e_local=e_local,
                  capacity=capacity, axis_name=axis_name)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(tokens_spec, None), P(tokens_spec, None),
                   P(tokens_spec, None),

@@ -22,6 +22,18 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# shard_map graduated from jax.experimental in ~0.5 and renamed its
+# replication-check kwarg check_rep -> check_vma; support both homes.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - old-jax fallback
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map_experimental(f, **kwargs)
+
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 
@@ -54,7 +66,9 @@ DEFAULT_RULES = ShardingRules(rules={
     "ssm_state": None,
     "fsdp": "data",        # parameter/optimizer-state sharding axis (ZeRO)
     "codebook": None,      # hash-decoder codebooks: replicated (tiny)
-    "entities": None,      # packed code rows
+    "entities": None,      # packed code rows (override to "data" to shard
+                           # the code buffer row-wise across hosts)
+    "frontier": "data",    # unique-node decode frontier: data-parallel rows
 })
 
 
@@ -149,6 +163,9 @@ def logical(x, *names: Optional[str]):
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # jax.sharding.AxisType landed after 0.4.x; older versions default to
+    # auto axes, which is exactly what we ask for on newer ones.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))

@@ -66,37 +66,43 @@ def run_training(
     ewma = None
     jitted = jax.jit(train_step, donate_argnums=(0,))
 
-    for step in range(start_step, loop_cfg.total_steps):
-        batch = to_device(data_iter.next_batch())
-        t0 = time.perf_counter()
-        state, metrics = jitted(state, batch)
-        loss = float(metrics["loss"])   # blocks: device sync = honest timing
-        dt = time.perf_counter() - t0
-        step_times.append(dt)
-        losses.append(loss)
+    try:
+        for step in range(start_step, loop_cfg.total_steps):
+            batch = to_device(data_iter.next_batch())
+            t0 = time.perf_counter()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])   # blocks: device sync = honest timing
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            losses.append(loss)
 
-        if ewma is None:
-            ewma = dt
-        else:
-            if dt > loop_cfg.straggler_factor * ewma:
-                stragglers += 1
-            ewma = (1 - loop_cfg.ewma_alpha) * ewma + loop_cfg.ewma_alpha * dt
+            if ewma is None:
+                ewma = dt
+            else:
+                if dt > loop_cfg.straggler_factor * ewma:
+                    stragglers += 1
+                ewma = (1 - loop_cfg.ewma_alpha) * ewma + loop_cfg.ewma_alpha * dt
 
-        if on_metrics and step % loop_cfg.log_every == 0:
-            on_metrics(step, {"loss": loss, "step_time": dt, "ewma": ewma})
+            if on_metrics and step % loop_cfg.log_every == 0:
+                on_metrics(step, {"loss": loss, "step_time": dt, "ewma": ewma})
 
-        if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
+            if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
+                extra = {}
+                if hasattr(data_iter, "state_dict"):
+                    extra["data"] = data_iter.state_dict()
+                ckpt.save(step + 1, state, extra)
+
+        if ckpt is not None:
             extra = {}
             if hasattr(data_iter, "state_dict"):
                 extra["data"] = data_iter.state_dict()
-            ckpt.save(step + 1, state, extra)
-
-    if ckpt is not None:
-        extra = {}
-        if hasattr(data_iter, "state_dict"):
-            extra["data"] = data_iter.state_dict()
-        ckpt.save(loop_cfg.total_steps, state, extra)
-        ckpt.wait()
+            ckpt.save(loop_cfg.total_steps, state, extra)
+            ckpt.wait()
+    finally:
+        # async prefetch iterators (repro.graph.engine.PrefetchIterator) own a
+        # producer thread; stop it whether the loop finished or raised
+        if hasattr(data_iter, "close"):
+            data_iter.close()
 
     return LoopResult(state=state, losses=losses, step_times=step_times,
                       stragglers=stragglers, resumed_from=resumed_from)

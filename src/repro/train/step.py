@@ -20,7 +20,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LMConfig
+from repro.configs.base import GNNConfig, LMConfig
 from repro.models.lm import LMCache, init_cache, lm_forward, lm_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.schedule import linear_warmup_cosine
@@ -100,6 +100,43 @@ def make_train_step(cfg: LMConfig, hyper: Optional[TrainHyper] = None) -> Callab
         new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
         metrics = {"loss": loss, "lr_scale": lr_scale}
         return new_state, metrics
+
+    return train_step
+
+
+def init_gnn_train_state(key, cfg: GNNConfig, codes=None, aux=None) -> Dict[str, Any]:
+    """Train state for the graph engine (same layout as the LM state)."""
+    from repro.graph.engine import GNNModel
+    params = GNNModel(cfg).init(key, codes=codes, aux=aux)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_gnn_train_step(cfg: GNNConfig,
+                        opt: Optional[AdamWConfig] = None) -> Callable:
+    """Node-classification train step over the unified ``GNNModel`` API.
+
+    The batch is a dict from an engine batch source: either
+    {"frontier": FrontierBatch, "labels": y} (dedup-decode path) or
+    {"levels": tuple, "labels": y} (naive reference path) — the model
+    dispatches on the batch view, so the step function is family-agnostic.
+    """
+    from repro.graph.engine import GNNModel, batch_view
+    from repro.models import gnn
+    model = GNNModel(cfg)
+    ocfg = opt or AdamWConfig(lr=1e-2, weight_decay=0.0)
+
+    def train_step(state, batch):
+        view = batch_view(batch)
+
+        def loss_fn(p):
+            h = model.apply(p, view)
+            return gnn.node_loss(model.logits(p, h), batch["labels"])
+
+        loss, g = jax.value_and_grad(loss_fn, allow_int=True)(state["params"])
+        params, opt_state = adamw_update(state["params"], g, state["opt"], ocfg)
+        new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
+        return new_state, {"loss": loss}
 
     return train_step
 

@@ -121,7 +121,10 @@ def test_elastic_restart_different_mesh():
             s1, _ = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))(state, batch)
         ck.save(1, s1)
 
-        # "restart" on a smaller mesh
+        # "restart" on a smaller mesh: a real restart runs in a fresh process,
+        # so re-create the step closure (also keeps jax<0.5 from reusing the
+        # mesh8-traced jaxpr — its trace cache ignores the mesh context)
+        step = make_train_step(cfg, TrainHyper(total_steps=10))
         mesh4 = make_mesh((2, 2), ('data', 'model'))
         restored, _ = ck.restore(1, jax.eval_shape(lambda: init_train_state(key, cfg)))
         with use_sharding(mesh4):
@@ -140,7 +143,7 @@ def test_gradient_compression_int8():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        from repro.parallel.sharding import make_mesh
+        from repro.parallel.sharding import make_mesh, shard_map
         from repro.optim.compress import psum_compressed, compress_gradients_int8, decompress_gradients_int8
 
         g = jax.random.normal(jax.random.PRNGKey(0), (1024,))
@@ -153,7 +156,7 @@ def test_gradient_compression_int8():
         gs = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
         def worker(g, r):
             return psum_compressed(g, 'data', r)
-        out, res = jax.jit(jax.shard_map(worker, mesh=mesh,
+        out, res = jax.jit(shard_map(worker, mesh=mesh,
             in_specs=(P('data', None), P('data', None)),
             out_specs=(P('data', None), P('data', None)), check_vma=False))(
             gs[:, None, :].reshape(8, 256) * 0 + gs, jnp.zeros((8, 256)))

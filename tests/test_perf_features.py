@@ -82,9 +82,8 @@ def test_strategy_rules():
     from repro.launch.mesh import make_host_mesh
     from repro.parallel.policy import Strategy, rules_for
     # needs only mesh *shape* metadata; single-device mesh objects are fine
-    import jax.sharding as js
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(js.AxisType.Auto,) * 2)
+    from repro.parallel.sharding import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     r_tp = rules_for(Strategy(), mesh)
     assert r_tp.rules["d_ff"] == "model" and r_tp.rules["batch"] == ("data",)
     r_dp = rules_for(Strategy(dp_over_model=True), mesh)
@@ -128,8 +127,8 @@ def test_hbm_model_scales():
     from repro.launch.hbm_model import analytic_hbm_bytes
     from repro.launch.mesh import make_host_mesh
     from repro.launch.shapes import SHAPES
-    import jax.sharding as js
-    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(js.AxisType.Auto,) * 2)
+    from repro.parallel.sharding import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = reduced(get_config("qwen1.5-0.5b"))
     train = analytic_hbm_bytes(cfg, SHAPES["train_4k"], mesh, microbatches=1)
     dec = analytic_hbm_bytes(cfg, SHAPES["decode_32k"], mesh)

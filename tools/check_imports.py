@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Import-health gate (ISSUE 1 satellite): fail fast when a module in the
+tree cannot even be imported, so a missing *optional* dependency can never
+silently break collection of unrelated test modules again.
+
+Two phases:
+
+  1. import every module under ``src/repro`` — these must ALWAYS import
+     (optional deps there have to be lazy/gated);
+  2. ``pytest --collect-only`` over ``tests/`` — test modules needing an
+     optional dependency must guard it with ``pytest.importorskip`` (skips
+     are fine, collection *errors* are not).
+
+Usage:  python tools/check_imports.py [--src-only]
+Exit code 0 = healthy.  Run it before the test suite in any verify path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import subprocess
+import sys
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+
+
+def iter_modules() -> list:
+    mods = []
+    for py in sorted((SRC / "repro").rglob("*.py")):
+        rel = py.relative_to(SRC).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        mods.append(".".join(parts))
+    return mods
+
+
+def check_src_imports() -> int:
+    sys.path.insert(0, str(SRC))
+    failures = 0
+    for mod in iter_modules():
+        try:
+            importlib.import_module(mod)
+        except Exception:
+            failures += 1
+            print(f"FAIL import {mod}")
+            traceback.print_exc(limit=3)
+    print(f"[check_imports] src: {len(iter_modules())} modules, "
+          f"{failures} import failure(s)")
+    return failures
+
+
+def check_test_collection() -> int:
+    import os
+    env = {**os.environ, "PYTHONPATH": str(SRC) + (
+        ":" + os.environ["PYTHONPATH"] if os.environ.get("PYTHONPATH") else "")}
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-p", "no:cacheprovider", "tests"],
+        cwd=str(ROOT), env=env, capture_output=True, text=True)
+    tail = "\n".join((proc.stdout or "").strip().splitlines()[-5:])
+    print(f"[check_imports] pytest --collect-only rc={proc.returncode}\n{tail}")
+    if proc.returncode not in (0, 5):   # 5 = no tests collected (empty tree)
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--src-only", action="store_true",
+                    help="skip the pytest collection phase (fast gate)")
+    args = ap.parse_args()
+    failures = check_src_imports()
+    if not args.src_only:
+        failures += check_test_collection()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
