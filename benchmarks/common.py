@@ -11,6 +11,17 @@ import numpy as np
 
 ROWS: List[Tuple[str, float, str]] = []
 
+# --smoke (benchmarks.run): every benchmark runs ~2 steps so the suite
+# exercises each module's full code path in seconds.  Numbers emitted in
+# smoke mode are NOT measurements — the mode exists so benchmarks can't
+# silently rot between perf runs.
+SMOKE = False
+
+
+def steps(n: int, smoke_n: int = 2) -> int:
+    """Loop-count helper: the requested count, or ``smoke_n`` under --smoke."""
+    return min(n, smoke_n) if SMOKE else n
+
 
 def emit(name: str, us_per_call: float, derived: str):
     ROWS.append((name, us_per_call, derived))
@@ -19,6 +30,8 @@ def emit(name: str, us_per_call: float, derived: str):
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in microseconds (blocks on outputs)."""
+    if SMOKE:
+        iters, warmup = 1, 1
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

@@ -1,0 +1,146 @@
+"""Decode-backend comparison on the frontier workload (ISSUE 2).
+
+Times the unique-frontier embedding decode — the hot op of compressed-
+embedding GNN training — through each registered ``DecodeBackend`` (gather /
+onehot / pallas) and through the hot-node ``CachedDecodeBackend``, on the
+sampler_pipeline workload: B=256 targets, fanout (10, 10), power-law graph.
+
+Emits the usual CSV rows AND writes ``BENCH_decode.json`` next to the repo
+root so the decode-path perf trajectory has a machine-readable datapoint per
+commit.
+
+Reading the numbers on a CPU container: ``pallas`` runs in interpret mode
+(a semantics check, orders of magnitude off kernel speed — compare backends
+on a TPU runtime); the cache's win column is ``rows_decoded`` (misses), the
+decode work a miss-only implementation performs, not wall-clock (the
+select-based cache still decodes every row on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, steps, time_fn
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core import backend as backend_mod
+from repro.core import embedding as emb_lib
+from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import SageBatchSource
+from repro.train.step import init_gnn_train_state, make_gnn_train_step
+
+N_NODES = 8000
+N_CLASSES = 8
+BATCH = 256
+FANOUT = 10
+KEY = jax.random.PRNGKey(0)
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_decode.json"
+
+
+def _setup():
+    adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
+                                 n_classes=N_CLASSES, homophily=0.9)
+    cfg = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                           kind="hash_full", fanout=FANOUT)
+    # lane-aligned d_c so the pallas backend never pads
+    cfg = dataclasses.replace(
+        cfg, embedding=dataclasses.replace(cfg.embedding, c=16, m=8,
+                                           d_c=128, d_m=64))
+    codes = emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj)
+    return adj, labels, cfg, codes
+
+
+def run():
+    adj, labels, cfg, codes = _setup()
+    ecfg = cfg.embedding_config()
+    state = init_gnn_train_state(KEY, cfg, codes=codes)
+    params = state["params"]
+
+    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
+    src = SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH, seed=1)
+    fb = jax.device_put(src.next_batch()["frontier"])
+    rows = int(fb.unique.shape[0])
+
+    report = {
+        "workload": {"n_nodes": N_NODES, "batch": BATCH,
+                     "fanouts": list(cfg.fanouts), "frontier_rows": rows,
+                     "c": ecfg.c, "m": ecfg.m, "d_c": ecfg.d_c},
+        "device": jax.default_backend(),
+        "backends": {},
+    }
+
+    # ---- per-backend frontier decode: forward and forward+backward ------
+    for name in ("gather", "onehot", "pallas"):
+        be = backend_mod.get_backend(
+            name, interpret=(jax.default_backend() != "tpu"))
+
+        fwd = jax.jit(lambda p, ids, be=be: emb_lib.embed_lookup(
+            p, ids, ecfg, backend=be))
+        grad = jax.jit(jax.grad(
+            lambda p, ids, be=be: emb_lib.embed_lookup(
+                p, ids, ecfg, backend=be).sum(), allow_int=True))
+
+        t_fwd = time_fn(fwd, params["embed"], fb.unique)
+        t_bwd = time_fn(grad, params["embed"], fb.unique)
+        note = "interpret" if (name == "pallas"
+                               and jax.default_backend() != "tpu") else "native"
+        emit(f"decode_backends/{name}/fwd", t_fwd, f"rows={rows} {note}")
+        emit(f"decode_backends/{name}/fwd_bwd", t_bwd, f"rows={rows} {note}")
+        report["backends"][name] = {
+            "fwd_us": t_fwd, "fwd_bwd_us": t_bwd, "rows": rows, "mode": note}
+
+    # ---- cached decode: training throughput + hit accounting ------------
+    n_steps = steps(20)
+    variants = {
+        "uncached": cfg,
+        "cached_s2": dataclasses.replace(cfg, embedding=dataclasses.replace(
+            cfg.embedding, cache_capacity=4096, cache_staleness=2)),
+    }
+    import time as _time
+    for label, c in variants.items():
+        vsrc = SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH,
+                               seed=1)
+        vstate = init_gnn_train_state(KEY, c, codes=codes)
+        step = jax.jit(make_gnn_train_step(c))
+        metrics = {}
+        t0 = None
+        for i in range(n_steps):
+            vstate, metrics = step(vstate, jax.device_put(vsrc.next_batch()))
+            jax.block_until_ready(metrics["loss"])
+            if i == 0:        # first step pays compile
+                t0 = _time.perf_counter()
+        per_step = (_time.perf_counter() - t0) / max(n_steps - 1, 1) * 1e6
+        entry = {"step_us": per_step, "steps": n_steps,
+                 "final_loss": float(metrics["loss"])}
+        derived = f"final_loss={entry['final_loss']:.4f}"
+        if "cache_hits" in metrics:
+            hits = int(metrics["cache_hits"])
+            misses = int(metrics["cache_misses"])
+            total = max(hits + misses, 1)
+            entry.update(hits=hits, misses=misses,
+                         hit_rate=hits / total,
+                         rows_decoded_per_step=misses / n_steps)
+            derived += (f" hit_rate={hits / total:.2f}"
+                        f" rows_decoded={misses / n_steps:.0f}/{rows}")
+        emit(f"decode_backends/{label}/step", per_step, derived)
+        report["backends"][label] = entry
+
+    # smoke runs exercise the code path but must not clobber the committed
+    # real-measurement datapoint with 1-2-iteration throwaway numbers
+    from benchmarks import common
+    if common.SMOKE:
+        emit("decode_backends/json", 0.0,
+             f"smoke: skipped writing {OUT_PATH.name}")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        emit("decode_backends/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, kmeans, nmi
+from benchmarks.common import steps, emit, kmeans, nmi
 from repro.configs.paper_gnn import paper_gnn_config
 from repro.core import lsh
 from repro.core.autoencoder import AutoencoderConfig, extract_codes, train_autoencoder
@@ -38,7 +38,7 @@ EVAL_N = 2000
 TRAIN_STEPS = 300
 
 
-def _train_decoder_on_reconstruction(key, emb_target, codes, steps=TRAIN_STEPS):
+def _train_decoder_on_reconstruction(key, emb_target, codes, n_steps=None):
     n, d_e = emb_target.shape
     cfg = EmbeddingConfig(kind="random_full", n_entities=n, d_e=d_e, c=C, m=M,
                           d_c=D_C, d_m=D_M, compute_dtype="float32")
@@ -56,7 +56,7 @@ def _train_decoder_on_reconstruction(key, emb_target, codes, steps=TRAIN_STEPS):
         return p, st, loss
 
     kb = jax.random.PRNGKey(1)
-    for i in range(steps):
+    for i in range(n_steps if n_steps is not None else steps(TRAIN_STEPS)):
         ids = jax.random.randint(jax.random.fold_in(kb, i), (512,), 0, n)
         params, st, loss = step(params, st, ids, emb_target[ids])
     return params, cfg, float(loss)
@@ -87,7 +87,7 @@ def run():
             rec = np.asarray(decode_all(params, cfg))
             q = nmi(kmeans(rec[:EVAL_N], N_CLUSTERS), labels[:EVAL_N])
             emit(f"fig1/{name}/n{n_entities}",
-                 (time.time() - t0) / TRAIN_STEPS * 1e6,
+                 (time.time() - t0) / steps(TRAIN_STEPS) * 1e6,
                  f"nmi={q:.4f};mse={loss:.5f}")
 
         # learning-based coding (autoencoder, Shu & Nakayama)
@@ -96,11 +96,11 @@ def run():
             d_in=DIM, c=C, m=M, d_h=D_C,
             decoder=DecoderConfig(c=C, m=M, d_c=D_C, d_m=D_M, d_e=DIM,
                                   compute_dtype="float32"))
-        ae_params, ae_loss = train_autoencoder(key, embj, acfg, steps=TRAIN_STEPS)
+        ae_params, ae_loss = train_autoencoder(key, embj, acfg, steps=steps(TRAIN_STEPS))
         codes = extract_codes(ae_params, embj, acfg)
         params, cfg, loss = _train_decoder_on_reconstruction(key, embj, codes)
         rec = np.asarray(decode_all(params, cfg))
         q = nmi(kmeans(rec[:EVAL_N], N_CLUSTERS), labels[:EVAL_N])
         emit(f"fig1/learn/n{n_entities}",
-             (time.time() - t0) / (2 * TRAIN_STEPS) * 1e6,
+             (time.time() - t0) / (2 * steps(TRAIN_STEPS)) * 1e6,
              f"nmi={q:.4f};mse={loss:.5f}")

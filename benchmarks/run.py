@@ -4,6 +4,7 @@
 #   fig1_reconstruction  Figure 1  — coding schemes vs entity count
 #   fig3_collisions      Figure 3  — median vs zero LSH threshold
 #   sampler_pipeline     ISSUE 1   — dedup-decode rows + prefetch steps/sec
+#   decode_backends      ISSUE 2   — gather/onehot/pallas/cached frontier decode
 #   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
@@ -13,6 +14,9 @@
 #
 # Run all:        PYTHONPATH=src python -m benchmarks.run
 # Run a subset:   PYTHONPATH=src python -m benchmarks.run --only fig3,table2
+# Smoke (CI):     PYTHONPATH=src python -m benchmarks.run --smoke
+#                 (~2 steps per benchmark: exercises every module's code path
+#                 quickly; emitted numbers are not measurements)
 import argparse
 import sys
 import time
@@ -22,6 +26,7 @@ MODULES = [
     "table2_4_6_memory",   # instant, exact — first
     "fig3_collisions",
     "sampler_pipeline",
+    "decode_backends",
     "kernels_micro",
     "roofline_report",
     "fig1_reconstruction",
@@ -35,7 +40,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module-name substrings")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run each benchmark for ~2 steps (rot check, not a "
+                         "measurement)")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks import common
+        common.SMOKE = True
 
     print("name,us_per_call,derived")
     failures = 0

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, steps
 from repro.configs.paper_gnn import paper_gnn_config
 from repro.core import embedding as emb_lib
 from repro.graph import NeighborSampler, powerlaw_graph
@@ -56,16 +56,17 @@ def _source(adj, labels, cfg, dedup: bool) -> SageBatchSource:
 def _run(step_fn, state, data_iter, n_steps: int):
     state = jax.tree.map(jnp.copy, state)   # each run trains from the same init
     jitted = jax.jit(step_fn)
+    warm = min(4, n_steps - 1)              # skip compile steps before timing
     losses, t0 = [], None
     for i in range(n_steps):
         batch = jax.device_put(data_iter.next_batch()) \
             if isinstance(data_iter, SageBatchSource) else data_iter.next_batch()
         state, metrics = jitted(state, batch)
         losses.append(float(metrics["loss"]))
-        if i == 4:           # skip compile steps before timing
+        if i == warm:
             t0 = time.perf_counter()
     dt = time.perf_counter() - t0
-    return np.asarray(losses), dt / (n_steps - 5)
+    return np.asarray(losses), dt / max(n_steps - warm - 1, 1)
 
 
 def run():
@@ -77,7 +78,7 @@ def run():
     # -- 1. decoded rows per batch: naive vs unique frontier ------------
     src = _source(adj, labels, cfg, dedup=True)
     uniq, padded = [], []
-    for _ in range(20):
+    for _ in range(steps(20)):
         fb = src.next_batch()["frontier"]
         uniq.append(int(fb.n_unique))
         padded.append(fb.unique.shape[0])
@@ -93,16 +94,16 @@ def run():
     # idle during the step and the full sampling time is recovered.
     t0 = time.perf_counter()
     probe = _source(adj, labels, cfg, dedup=True)
-    for _ in range(20):
+    for _ in range(steps(20)):
         probe.next_batch()
-    emit("sampler_pipeline/host_sample", (time.perf_counter() - t0) / 20 * 1e6,
+    emit("sampler_pipeline/host_sample", (time.perf_counter() - t0) / steps(20) * 1e6,
          "host-side numpy sampling per batch")
 
     sync_src = _source(adj, labels, cfg, dedup=True)
-    _, t_sync = _run(step_fn, state, sync_src, STEPS)
+    _, t_sync = _run(step_fn, state, sync_src, steps(STEPS))
     pf = PrefetchIterator(_source(adj, labels, cfg, dedup=True), depth=2)
     try:
-        _, t_pf = _run(step_fn, state, pf, STEPS)
+        _, t_pf = _run(step_fn, state, pf, steps(STEPS))
     finally:
         pf.close()
     emit("sampler_pipeline/step_sync", t_sync * 1e6,
@@ -115,8 +116,8 @@ def run():
     # training the two paths reduce gradients in different orders (dedup
     # scatter-adds into unique rows), so trajectories track within float32
     # accumulation noise rather than exactly.
-    losses_dedup, _ = _run(step_fn, state, _source(adj, labels, cfg, True), 30)
-    losses_naive, _ = _run(step_fn, state, _source(adj, labels, cfg, False), 30)
+    losses_dedup, _ = _run(step_fn, state, _source(adj, labels, cfg, True), steps(30))
+    losses_naive, _ = _run(step_fn, state, _source(adj, labels, cfg, False), steps(30))
     gaps = np.abs(losses_dedup - losses_naive)
     emit("sampler_pipeline/loss_parity", float(gaps.max()) * 1e6,
          f"max_abs_loss_gap={gaps.max():.3e} early_gap={gaps[:10].max():.3e} "

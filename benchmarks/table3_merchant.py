@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, steps
 from repro.configs.paper_gnn import merchant_config
 from repro.core import lsh
 from repro.graph import NeighborSampler
@@ -61,8 +61,10 @@ def run():
 
         t0 = time.time()
         nsteps = 0
-        for epoch in range(4):
+        for epoch in range(steps(4, 1)):
             for levels, batch in sampler.minibatches(merchants[tr_i], 256):
+                if nsteps >= steps(10**9):
+                    break
                 y = jnp.asarray(labels[batch - n_cons])
                 p, st, _ = step(p, st, [jnp.asarray(l) for l in levels], y)
                 nsteps += 1

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, kmeans, nmi
+from benchmarks.common import steps, emit, kmeans, nmi
 from benchmarks.fig1_reconstruction import _train_decoder_on_reconstruction
 from repro.core import lsh
 from repro.core.embedding import decode_all
@@ -35,10 +35,10 @@ def run():
                 f1.C, f1.M = c, m     # reuse the trainer at this (c, m)
                 t0 = time.time()
                 params, cfg, loss = _train_decoder_on_reconstruction(
-                    key, embj, codes, steps=200)
+                    key, embj, codes, n_steps=steps(200))
                 rec = np.asarray(decode_all(params, cfg))
                 q = nmi(kmeans(rec[:EVAL_N], 8), labels[:EVAL_N])
                 emit(f"table5/c{c}m{m}/{scheme}/n{n_entities}",
-                     (time.time() - t0) / 200 * 1e6, f"nmi={q:.4f}")
+                     (time.time() - t0) / steps(200) * 1e6, f"nmi={q:.4f}")
     f1 = __import__("benchmarks.fig1_reconstruction", fromlist=["C"])
     f1.C, f1.M = 16, 16   # restore defaults

@@ -25,7 +25,7 @@ for n in (1000, 4000, 8000):
         codes = (lsh.encode_random(key, n, 16, 16) if scheme == "random"
                  else lsh.encode_lsh(key, embj, 16, 16))
         params, cfg, _ = _train_decoder_on_reconstruction(key, embj, codes,
-                                                          steps=200)
+                                                          n_steps=200)
         rec = np.asarray(decode_all(params, cfg))
         row[scheme] = nmi(kmeans(rec[:1000], 8), labels[:1000])
     print(f"{n:>9} {row['raw']:7.3f} {row['random']:7.3f} {row['hashing']:8.3f}")

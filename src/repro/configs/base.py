@@ -22,9 +22,11 @@ class EmbeddingSpec:
     d_c: int = 512
     d_m: int = 512
     n_layers: int = 3         # paper §5.3: l=3, d_c=d_m=512
-    lookup_impl: str = "onehot"
+    lookup_impl: str = "onehot"  # decode backend name or "auto" (core.backend)
     threshold: str = "median" # Algorithm-1 binarisation ("zero" = Charikar baseline)
     hops: int = 1             # §6.1 higher-order adjacency (A^k auxiliary)
+    cache_capacity: int = 0   # hot-node decode cache slots (0 = disabled)
+    cache_staleness: int = 0  # codebook versions a cached embedding may lag
 
     def to_config(self, n_entities: int, d_e: int, compute_dtype: str) -> EmbeddingConfig:
         return EmbeddingConfig(
@@ -33,6 +35,8 @@ class EmbeddingSpec:
             n_layers=self.n_layers, lookup_impl=self.lookup_impl,
             compute_dtype=compute_dtype,
             threshold=self.threshold, hops=self.hops,
+            cache_capacity=self.cache_capacity,
+            cache_staleness=self.cache_staleness,
         )
 
 

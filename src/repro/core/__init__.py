@@ -3,12 +3,21 @@
 encode (one-shot, training-free)        -> core.lsh.encode_lsh (Algorithm 1)
 store  (packed bit codes)               -> core.codes
 decode (trainable, entity-independent)  -> core.decoder
+decode backends (gather/onehot/pallas)  -> core.backend (+ hot-node cache)
 drop-in layer                           -> core.embedding (init/lookup API)
 baselines                               -> lsh.encode_random (ALONE), core.autoencoder
 memory model                            -> core.memory (Tables 2/4/6, exact)
 """
 
 from repro.core import codes
+from repro.core.backend import (
+    CachedDecodeBackend,
+    CacheState,
+    DecodeBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
 from repro.core.embedding import (
     EmbeddingConfig,
@@ -22,6 +31,8 @@ from repro.core.memory import compression_ratio, memory_breakdown
 
 __all__ = [
     "codes",
+    "CachedDecodeBackend", "CacheState", "DecodeBackend",
+    "available_backends", "get_backend", "register_backend",
     "DecoderConfig", "apply_decoder", "init_decoder",
     "EmbeddingConfig", "embed_lookup", "init_embedding", "make_codes", "decode_all",
     "encode_lsh", "encode_lsh_codes", "encode_random",

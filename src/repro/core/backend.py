@@ -1,0 +1,384 @@
+"""Pluggable decode backends for the paper's hot op (codes -> codebook sum).
+
+Every call-site that rebuilds a node/token embedding from its m hash codes —
+the embedding layer, the GNN frontier decode, the LM input path and serving —
+routes through one ``DecodeBackend``:
+
+    decode(codes (B, m) int32, codebooks (m, c, d_c), w0 (d_c,)?) -> (B, d_c) f32
+
+Three implementations are registered:
+
+  gather   m sequential gathers accumulated in f32 — the paper's GPU
+           formulation and the bit-exactness oracle (accumulation order
+           matches the Pallas kernel's, so kernel parity is bitwise).
+  onehot   one (B, m*c) x (m*c, d_c) matmul with f32 accumulation — the MXU
+           formulation XLA fuses well.
+  pallas   ``kernels.hash_decode`` fused kernel.  Unaligned ``B``/``d_c`` are
+           explicitly zero-padded to tile/block multiples here (a warning is
+           emitted once) instead of silently falling back to the reference
+           path.
+
+Selection is by config string (``lookup_impl``): a backend name, or ``auto``
+which picks ``pallas`` on TPU-capable runtimes and ``onehot`` otherwise.
+New backends (e.g. a sharded multi-host decode) register via
+``register_backend`` and become selectable by name everywhere at once.
+
+``CachedDecodeBackend`` layers a device-resident LRU of *decoded embeddings*
+keyed by entity id on top of any base decode path: hot (high-degree) nodes
+recur in almost every GNN frontier, and their embeddings only drift as fast
+as the decoder parameters train.  A ``staleness`` budget (in codebook
+versions; the train step bumps the version on every optimizer update) bounds
+that drift; at staleness 0 every access re-decodes, reproducing the uncached
+computation exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# f32 min tile on TPU is (8, 128): sublane multiple for the batch dim, lane
+# multiple for the feature dim (pallas guide, "Tiling Constraints").
+_SUBLANE = 8
+_LANE = 128
+
+_warned: set = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, stacklevel=3)
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Metadata consumed by selection logic and call-sites."""
+    grad: bool = True            # differentiable w.r.t. codebooks / w0
+    fused: bool = False          # single fused kernel (no HBM intermediates)
+    accelerator: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+
+
+class DecodeBackend:
+    """Protocol: subclasses set ``name``/``capabilities``/``preferred_pad``
+    and implement ``decode``.  ``preferred_pad`` is the batch multiple the
+    backend runs best at — frontier padding (``pad_to``) should be a multiple
+    of it so the hot path never hits the padding fix-up."""
+
+    name: str = "abstract"
+    capabilities = BackendCapabilities()
+    preferred_pad: int = 1
+
+    def decode(self, codes: Array, codebooks: Array,
+               w0: Optional[Array] = None) -> Array:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<DecodeBackend {self.name}>"
+
+
+class GatherBackend(DecodeBackend):
+    """Oracle: m sequential gathers, f32 accumulation in codebook order j=0..m-1
+    (the same order the Pallas kernel accumulates in, so parity is bitwise)."""
+
+    name = "gather"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+    preferred_pad = 1
+
+    def decode(self, codes, codebooks, w0=None):
+        m = codebooks.shape[0]
+        acc = codebooks[0].astype(jnp.float32)[codes[:, 0]]
+        for j in range(1, m):
+            acc = acc + codebooks[j].astype(jnp.float32)[codes[:, j]]
+        if w0 is not None:
+            acc = acc * w0.astype(jnp.float32)[None, :]
+        return acc
+
+
+class OnehotBackend(DecodeBackend):
+    """One-hot x stacked-codebook matmul; the sum over m is absorbed into a
+    single (B, m*c) x (m*c, d_c) contraction the MXU executes natively."""
+
+    name = "onehot"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+    preferred_pad = _SUBLANE
+
+    def decode(self, codes, codebooks, w0=None):
+        m, c, d_c = codebooks.shape
+        B = codes.shape[0]
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2)
+        onehot = (codes[:, :, None] == iota_c).astype(codebooks.dtype)
+        out = jax.lax.dot_general(
+            onehot.reshape(B, m * c), codebooks.reshape(m * c, d_c),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        if w0 is not None:
+            out = out * w0.astype(jnp.float32)[None, :]
+        return out
+
+
+class PallasBackend(DecodeBackend):
+    """Fused Pallas kernel with explicit padding of unaligned shapes.
+
+    ``B`` is padded with zero codes (code 0 is always valid) up to a
+    tile/block multiple; ``d_c`` is padded by zero-extending the codebooks
+    (and w0) along the feature dim.  Both paths warn once — persistent
+    unaligned shapes should fix their config, not eat a copy per call."""
+
+    name = "pallas"
+    capabilities = BackendCapabilities(
+        grad=True, fused=True, accelerator=("tpu",))
+
+    def __init__(self, block_b: int = 256, block_d: int = 256,
+                 interpret: bool = False):
+        self.block_b = int(block_b)
+        self.block_d = int(block_d)
+        self.interpret = bool(interpret)
+        self.preferred_pad = self.block_b
+
+    def _plan(self, B: int, d_c: int) -> Tuple[int, int, int, int]:
+        """Minimal padding to tile multiples, then the largest tileable
+        block that divides each padded dim — shrinking the block is free,
+        padding (especially the codebook copy along d_c) is not."""
+        B_pad = _round_up(B, _SUBLANE)
+        bb = min(self.block_b, B_pad)
+        while B_pad % bb:
+            bb -= _SUBLANE
+        d_pad = _round_up(d_c, _LANE)
+        bd = min(self.block_d, d_pad)
+        while d_pad % bd:
+            bd -= _LANE
+        return B_pad, bb, d_pad, bd
+
+    def decode(self, codes, codebooks, w0=None):
+        from repro.kernels.hash_decode import ops as hd_ops
+
+        B = codes.shape[0]
+        d_c = codebooks.shape[2]
+        B_pad, block_b, d_pad, block_d = self._plan(B, d_c)
+        if B_pad != B:
+            _warn_once(
+                f"pallas-pad-b-{B}",
+                f"pallas decode: padding batch {B} -> {B_pad}; pad frontiers "
+                f"to a multiple of preferred_pad={self.preferred_pad} to "
+                f"avoid the copy")
+            codes = jnp.pad(codes, ((0, B_pad - B), (0, 0)))
+        if d_pad != d_c:
+            _warn_once(
+                f"pallas-pad-d-{d_c}",
+                f"pallas decode: padding d_c {d_c} -> {d_pad} (codebook "
+                f"copy per call); prefer lane-aligned d_c")
+            codebooks = jnp.pad(codebooks, ((0, 0), (0, 0), (0, d_pad - d_c)))
+            if w0 is not None:
+                w0 = jnp.pad(w0, (0, d_pad - d_c))
+        out = hd_ops.hash_decode(
+            codes, codebooks, w0,
+            block_b=block_b, block_d=block_d, interpret=self.interpret)
+        return out[:B, :d_c]
+
+
+# ---------------------------------------------------------------------------
+# registry / selection
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., DecodeBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., DecodeBackend]) -> None:
+    """Register a backend factory; ``factory(**opts) -> DecodeBackend``.
+    Re-registering a name overrides it (tests swap in instrumented fakes)."""
+    _REGISTRY[name] = factory
+
+
+register_backend("gather", GatherBackend)
+register_backend("onehot", OnehotBackend)
+register_backend("pallas", PallasBackend)
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_auto() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "onehot"
+
+
+def get_backend(spec, *, interpret: bool = False) -> DecodeBackend:
+    """Resolve a backend from a config string (or pass an instance through).
+
+    ``auto`` picks the fused kernel on TPU runtimes and the MXU-friendly
+    XLA formulation elsewhere.  ``interpret`` only affects ``pallas``."""
+    if isinstance(spec, DecodeBackend):
+        return spec
+    name = spec or "auto"
+    if name == "auto":
+        name = resolve_auto()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown decode backend {name!r}; known: {available_backends()}")
+    if name == "pallas":
+        return _REGISTRY[name](interpret=interpret)
+    return _REGISTRY[name]()
+
+
+# ---------------------------------------------------------------------------
+# hot-node cache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CacheState:
+    """Functional state of the hot-node decode cache (a pytree: it lives in
+    the train state, flows through jit, and checkpoints like any buffer).
+
+    ``node_ids``   (C,) int32 entity id per slot (-1 = empty)
+    ``values``     (C, d) f32 cached decoded embeddings
+    ``version``    (C,) int32 codebook version each entry was decoded at
+    ``last_used``  (C,) int32 LRU clock of last access
+    ``version_counter`` () int32 current codebook version (bumped per
+                   optimizer update)
+    ``clock``      () int32 access counter driving LRU order
+    ``hits`` / ``misses`` () int32 cumulative accounting
+    """
+
+    node_ids: Array
+    values: Array
+    version: Array
+    last_used: Array
+    version_counter: Array
+    clock: Array
+    hits: Array
+    misses: Array
+
+    def tree_flatten(self):
+        return (self.node_ids, self.values, self.version, self.last_used,
+                self.version_counter, self.clock, self.hits, self.misses), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, leaves):
+        return cls(*leaves)
+
+    @classmethod
+    def create(cls, capacity: int, d: int, dtype=jnp.float32) -> "CacheState":
+        i32 = jnp.int32
+        return cls(
+            node_ids=jnp.full((capacity,), -1, i32),
+            values=jnp.zeros((capacity, d), dtype),
+            version=jnp.full((capacity,), jnp.iinfo(i32).min // 2, i32),
+            last_used=jnp.full((capacity,), jnp.iinfo(i32).min // 2, i32),
+            version_counter=jnp.zeros((), i32),
+            clock=jnp.zeros((), i32),
+            hits=jnp.zeros((), i32),
+            misses=jnp.zeros((), i32),
+        )
+
+    @property
+    def capacity(self) -> int:
+        return self.node_ids.shape[0]
+
+
+class CachedDecodeBackend:
+    """LRU cache of decoded embeddings keyed by entity id, wrapping any base
+    decode path.
+
+    ``lookup(state, ids, decode_fn)`` serves each id from the cache when its
+    entry is fresh enough (``version_counter - entry_version <= staleness``)
+    and re-decodes otherwise; re-decoded rows are written back (LRU
+    eviction), hit rows only refresh their LRU stamp.  Gradients flow
+    through ``decode_fn`` for misses only — cached rows are constants from
+    an earlier version, which is exactly the staleness trade.
+
+    Ids within one lookup should be unique (the frontier decode guarantees
+    it — pass ``valid`` to mask its padding rows); duplicate miss ids burn
+    duplicate slots but reads stay correct.  At ``staleness=0`` an entry is
+    only fresh within the version it was written at, so with one lookup per
+    optimizer step every access re-decodes and training is bit-identical to
+    the uncached path.
+    """
+
+    def __init__(self, staleness: int = 0):
+        self.staleness = int(staleness)
+
+    def init_state(self, capacity: int, d: int, dtype=jnp.float32) -> CacheState:
+        return CacheState.create(capacity, d, dtype)
+
+    def lookup(self, state: CacheState, ids: Array,
+               decode_fn: Callable[[Array], Array],
+               valid: Optional[Array] = None):
+        """ids (U,) int32 -> ((U, d) embeddings, new CacheState).
+
+        ``valid`` (U,) bool masks rows out of the cache entirely (they still
+        decode, but never hit, never write, and don't count in the hit/miss
+        accounting) — used for the frontier's jit-shape padding rows, which
+        are duplicates of row 0."""
+        C = state.capacity
+        U = ids.shape[0]
+        eq = ids[:, None] == state.node_ids[None, :]          # (U, C)
+        found = eq.any(axis=1)
+        if valid is not None:
+            found = found & valid
+        slot = jnp.argmax(eq, axis=1)                         # valid iff found
+        age = state.version_counter - state.version[slot]
+        hit = found & (age <= self.staleness)
+
+        fresh = decode_fn(ids)                                # (U, d)
+        out = jnp.where(hit[:, None], state.values[slot].astype(fresh.dtype),
+                        fresh)
+
+        # ---- state update (all scatters masked via index C + mode="drop")
+        clock = state.clock + 1
+        n_valid = (jnp.int32(U) if valid is None
+                   else valid.sum(dtype=jnp.int32))
+        n_hit = hit.sum(dtype=jnp.int32)
+
+        # hits only refresh their LRU stamp
+        hidx = jnp.where(hit, slot, C)
+        last_used = state.last_used.at[hidx].set(clock, mode="drop")
+
+        # misses write back: stale-but-present entries refresh in place,
+        # absent ids take the least-recently-used unprotected slots.  Only
+        # the first n_free absent misses get a slot — ranks past that would
+        # reach into the protected suffix of evict_order and collide with a
+        # found row's in-place refresh (two ids scattering to one slot).
+        protected = jnp.zeros((C,), bool).at[jnp.where(found, slot, C)].set(
+            True, mode="drop")
+        n_free = C - protected.sum(dtype=jnp.int32)
+        evict_order = jnp.argsort(
+            jnp.where(protected, jnp.iinfo(jnp.int32).max, last_used))
+        needs_slot = ~found
+        if valid is not None:
+            needs_slot = needs_slot & valid
+        rank = jnp.cumsum(needs_slot.astype(jnp.int32)) - 1   # (U,)
+        new_slot = evict_order[jnp.clip(rank, 0, C - 1)]
+        write = (~hit) & (found | (needs_slot & (rank < n_free)))
+        widx = jnp.where(write, jnp.where(found, slot, new_slot), C)
+
+        wvals = jax.lax.stop_gradient(fresh).astype(state.values.dtype)
+        new_state = CacheState(
+            node_ids=state.node_ids.at[widx].set(ids, mode="drop"),
+            values=state.values.at[widx].set(wvals, mode="drop"),
+            version=state.version.at[widx].set(state.version_counter,
+                                               mode="drop"),
+            last_used=last_used.at[widx].set(clock, mode="drop"),
+            version_counter=state.version_counter,
+            clock=clock,
+            hits=state.hits + n_hit,
+            misses=state.misses + (n_valid - n_hit),
+        )
+        return out, new_state
+
+    @staticmethod
+    def bump_version(state: CacheState) -> CacheState:
+        """Codebook/decoder update notification — call once per optimizer
+        step that touches decoder parameters."""
+        return dataclasses.replace(
+            state, version_counter=state.version_counter + 1)

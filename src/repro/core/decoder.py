@@ -7,11 +7,10 @@ codes (B, m) ints in [0, c)
      full  variant: no W0 (codebooks trainable)
   -> l-layer MLP with ReLU between linear layers: d_c -> d_m -> ... -> d_e
 
-TPU adaptation (DESIGN.md §3): the codebook retrieval is expressed either as
-a gather (``lookup_impl='gather'``, the paper's GPU formulation and our
-oracle) or as a one-hot×codebook matmul (``lookup_impl='onehot'``) which the
-MXU executes natively; the Pallas kernel ``kernels/hash_decode`` fuses the
-one-hot build + matmul + sum + W0 scale (``lookup_impl='pallas'``).
+TPU adaptation (DESIGN.md §3): the codebook retrieval + W0 scale is a
+``repro.core.backend.DecodeBackend`` selected by ``lookup_impl`` ("gather" |
+"onehot" | "pallas" | "auto"); see that module for the implementations and
+the registration hook for new ones.
 """
 
 from __future__ import annotations
@@ -22,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import DecodeBackend, get_backend
 from repro.nn import module as nn
 from repro.parallel import sharding
 
@@ -37,7 +37,7 @@ class DecoderConfig:
     d_e: int = 64          # output embedding dim
     n_layers: int = 3      # number of linear layers (paper's l)
     variant: str = "full"  # "full" (trainable codebooks) | "light" (frozen + W0)
-    lookup_impl: str = "onehot"  # "gather" | "onehot" | "pallas"
+    lookup_impl: str = "onehot"  # "gather" | "onehot" | "pallas" | "auto"
     compute_dtype: str = "bfloat16"
 
     def trainable_params(self) -> int:
@@ -85,59 +85,30 @@ def init_decoder(key: jax.Array, cfg: DecoderConfig) -> nn.Params:
     return params
 
 
-def _codebook_sum_gather(codebooks: Array, codes: Array) -> Array:
-    """Oracle path: m gathers + sum.  codes (B, m) -> (B, d_c)."""
-    # codebooks (m, c, d_c); take_along_axis over c per codebook
-    gathered = jnp.take_along_axis(
-        codebooks[None],                      # (1, m, c, d_c)
-        codes[:, :, None, None],              # (B, m, 1, 1)
-        axis=2,
-    )                                         # (B, m, 1, d_c)
-    return gathered[:, :, 0, :].sum(axis=1)
-
-
-def _codebook_sum_onehot(codebooks: Array, codes: Array, c: int) -> Array:
-    """MXU path: one-hot × stacked codebooks. codes (B, m) -> (B, d_c).
-
-    onehot is (B, m*c) with exactly m ones; stacked codebooks (m*c, d_c).
-    The sum over m is absorbed into the single matmul.
-    """
-    m, _, d_c = codebooks.shape
-    B = codes.shape[0]
-    iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2)
-    onehot = (codes[:, :, None] == iota_c).astype(codebooks.dtype)  # (B, m, c)
-    return onehot.reshape(B, m * c) @ codebooks.reshape(m * c, d_c)
-
-
 def apply_decoder(
     params: nn.Params,
     codes: Array,
     cfg: DecoderConfig,
     *,
     interpret: bool = False,
+    backend: Optional[DecodeBackend] = None,
 ) -> Array:
-    """codes (..., m) int32 -> embeddings (..., d_e)."""
+    """codes (..., m) int32 -> embeddings (..., d_e).
+
+    ``backend`` overrides the config's ``lookup_impl`` (call-sites that hold
+    a resolved backend — the graph engine, benchmarks — pass it straight
+    through instead of re-resolving per call)."""
     lead = codes.shape[:-1]
     codes2d = codes.reshape(-1, cfg.m)
     dtype = jnp.dtype(cfg.compute_dtype)
 
     cb = params["codebooks_buf"] if cfg.variant == "light" else params["codebooks"]
     cb = cb.astype(dtype)
+    w0 = params["w0"].astype(dtype) if cfg.variant == "light" else None
 
-    impl = cfg.lookup_impl
-    if impl == "pallas":
-        from repro.kernels.hash_decode import ops as hd_ops
-        w0 = params["w0"].astype(dtype) if cfg.variant == "light" else None
-        h = hd_ops.hash_decode(codes2d, cb, w0=w0, interpret=interpret)
-    else:
-        if impl == "gather":
-            h = _codebook_sum_gather(cb, codes2d)
-        elif impl == "onehot":
-            h = _codebook_sum_onehot(cb, codes2d, cfg.c)
-        else:
-            raise ValueError(f"unknown lookup_impl {impl!r}")
-        if cfg.variant == "light":
-            h = h * params["w0"].astype(dtype)[None, :]
+    be = backend if backend is not None else get_backend(
+        cfg.lookup_impl, interpret=interpret)
+    h = be.decode(codes2d, cb, w0).astype(dtype)
 
     mlp = params["mlp"]
     for i in range(cfg.n_layers):

@@ -41,13 +41,18 @@ class EmbeddingConfig:
     d_c: int = 512
     d_m: int = 512
     n_layers: int = 3
-    lookup_impl: str = "onehot"
+    lookup_impl: str = "onehot"   # decode backend name or "auto" (core.backend)
     compute_dtype: str = "bfloat16"
     # Algorithm-1 encoding knobs (hash kinds only): "median" is the paper's
     # threshold, "zero" the Charikar-LSH baseline (Fig. 3); hops>1 pushes the
     # projection through the graph k times (§6.1 higher-order adjacency).
     threshold: str = "median"
     hops: int = 1
+    # Hot-node decode cache (CachedDecodeBackend): capacity 0 disables it;
+    # staleness is the number of codebook versions a cached embedding may
+    # lag behind (0 = always re-decode, bit-identical to uncached).
+    cache_capacity: int = 0
+    cache_staleness: int = 0
 
     @property
     def is_compressed(self) -> bool:
@@ -111,14 +116,17 @@ def embed_lookup(
     cfg: EmbeddingConfig,
     *,
     interpret: bool = False,
+    backend=None,
 ) -> Array:
-    """ids (...,) int32 -> embeddings (..., d_e)."""
+    """ids (...,) int32 -> embeddings (..., d_e).  ``backend`` is an optional
+    resolved ``DecodeBackend`` overriding ``cfg.lookup_impl``."""
     if cfg.kind == "dense":
         table = params["table"].astype(jnp.dtype(cfg.compute_dtype))
         return table[ids]
     packed = jnp.take(params["codes_buf"], ids, axis=0)       # (..., n_words)
     codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)      # (..., m)
-    return apply_decoder(params["decoder"], codes, cfg.decoder_config(), interpret=interpret)
+    return apply_decoder(params["decoder"], codes, cfg.decoder_config(),
+                         interpret=interpret, backend=backend)
 
 
 def decode_all(params: nn.Params, cfg: EmbeddingConfig, block: int = 8192) -> Array:

@@ -72,26 +72,47 @@ class GNNModel:
       FrontierBatch   -> dedup-decode minibatched GraphSAGE
       list of levels  -> naive minibatched GraphSAGE (reference path)
       FullGraphBatch  -> full-graph GCN / SGC / GIN (or CSRMatrix directly)
+
+    The embedding decode goes through the ``DecodeBackend`` selected by the
+    config's ``lookup_impl`` (resolved once here, not per trace);
+    ``interpret=True`` runs the pallas backend in interpret mode (CPU CI).
+    ``apply_cached(params, batch, cache_state)`` is the hot-node-cache twin
+    for the frontier path — it returns ``(hidden, new_cache_state)``.
     """
 
-    def __init__(self, cfg: GNNConfig):
+    def __init__(self, cfg: GNNConfig, interpret: bool = False):
+        from repro.core.backend import get_backend
         self.cfg = cfg
+        self.backend = get_backend(cfg.embedding.lookup_impl,
+                                   interpret=interpret)
 
     def init(self, key, codes=None, aux=None):
         return gnn.init_gnn(key, self.cfg, codes=codes, aux=aux)
 
     def apply(self, params, batch: Batch):
         if isinstance(batch, FrontierBatch):
-            return gnn.sage_forward_frontier(params, batch, self.cfg)
+            return gnn.sage_forward_frontier(params, batch, self.cfg,
+                                             backend=self.backend)
         if isinstance(batch, FullGraphBatch):
             return gnn.fullgraph_forward(params, batch.adj, self.cfg)
         if isinstance(batch, CSRMatrix):
             return gnn.fullgraph_forward(params, batch, self.cfg)
         if isinstance(batch, (list, tuple)):
-            return gnn.sage_forward(params, list(batch), self.cfg)
+            return gnn.sage_forward(params, list(batch), self.cfg,
+                                    backend=self.backend)
         if isinstance(batch, dict):
             return self.apply(params, batch_view(batch))
         raise TypeError(f"GNNModel.apply: unsupported batch type {type(batch)!r}")
+
+    def apply_cached(self, params, batch: Batch, cache_state):
+        """Frontier batches decode through the hot-node cache; every other
+        batch type falls back to ``apply`` with the state passed through."""
+        if isinstance(batch, dict):
+            batch = batch_view(batch)
+        if isinstance(batch, FrontierBatch):
+            return gnn.sage_forward_frontier_cached(
+                params, batch, self.cfg, cache_state, backend=self.backend)
+        return self.apply(params, batch), cache_state
 
     def logits(self, params, hidden):
         return gnn.node_logits(params, hidden, self.cfg)

@@ -9,6 +9,7 @@ Codes are integers — no gradient flows to them.
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -18,9 +19,23 @@ import jax.numpy as jnp
 from repro.kernels.hash_decode.kernel import hash_decode_fwd
 from repro.kernels.hash_decode.ref import hash_decode_ref
 
+# f32 min tile (sublane, lane) on TPU — a block that isn't a multiple of
+# this fails Mosaic layout even when it divides the array.
+_SUBLANE = 8
+_LANE = 128
+
+_warned_fallback = False
+
 
 def _aligned(B: int, d_c: int, block_b: int, block_d: int) -> bool:
-    return B % min(block_b, B) == 0 and d_c % min(block_d, d_c) == 0
+    """True iff the kernel can run: the (clamped) blocks must divide the
+    array dims AND be hardware-tileable.  The old check ``B % min(block_b,
+    B)`` was vacuously 0 whenever ``block_b > B`` — it reported e.g. B=100
+    as aligned, which only works in interpret mode (100 is not a sublane
+    multiple) and silently diverged from TPU behaviour."""
+    bb, bd = min(block_b, B), min(block_d, d_c)
+    return (B % bb == 0 and d_c % bd == 0
+            and bb % _SUBLANE == 0 and bd % _LANE == 0)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -65,9 +80,23 @@ def hash_decode(
     interpret: bool = False,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
-    """codes (B, m) int32, codebooks (m, c, d_c) -> (B, d_c) f32."""
+    """codes (B, m) int32, codebooks (m, c, d_c) -> (B, d_c) f32.
+
+    Unaligned shapes fall back to the jnp reference path with a one-time
+    warning; callers that want the kernel unconditionally should pad to
+    block multiples first (``core.backend.PallasBackend`` does exactly
+    that)."""
+    global _warned_fallback
     B = codes.shape[0]
     d_c = codebooks.shape[2]
     if use_kernel and not _aligned(B, d_c, block_b, block_d):
+        if not _warned_fallback:
+            _warned_fallback = True
+            warnings.warn(
+                f"hash_decode: shapes B={B}, d_c={d_c} not tileable with "
+                f"blocks ({block_b}, {block_d}); falling back to the jnp "
+                f"reference path (pad inputs, e.g. via "
+                f"repro.core.backend.PallasBackend, to run the kernel)",
+                stacklevel=2)
         use_kernel = False
     return _hash_decode(codes, codebooks, w0, block_b, block_d, interpret, use_kernel)

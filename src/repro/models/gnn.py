@@ -94,29 +94,64 @@ def _sage_combine(params, h0: Array, h1: Array, h2: Array) -> Array:
     return z
 
 
-def sage_forward(params, levels: List[Array], cfg: GNNConfig) -> Array:
+def sage_forward(params, levels: List[Array], cfg: GNNConfig,
+                 backend=None) -> Array:
     """Naive path — levels: [targets (B,), l1 (B,f1), l2 (B,f1,f2)] node ids,
     each decoded independently (B + B·f1 + B·f1·f2 decoder rows)."""
     ecfg = cfg.embedding_config()
-    h0 = emb_lib.embed_lookup(params["embed"], levels[0], ecfg)     # (B, de)
-    h1 = emb_lib.embed_lookup(params["embed"], levels[1], ecfg)     # (B, f1, de)
-    h2 = emb_lib.embed_lookup(params["embed"], levels[2], ecfg)     # (B, f1, f2, de)
+    lk = lambda ids: emb_lib.embed_lookup(params["embed"], ids, ecfg,
+                                          backend=backend)
+    h0 = lk(levels[0])                                              # (B, de)
+    h1 = lk(levels[1])                                              # (B, f1, de)
+    h2 = lk(levels[2])                                              # (B, f1, f2, de)
     return _sage_combine(params, h0, h1, h2)
 
 
-def sage_forward_frontier(params, fb: FrontierBatch, cfg: GNNConfig) -> Array:
-    """Dedup-decode path: one ``embed_lookup`` over the unique frontier, then
-    cheap gathers rebuild the per-level tensors.  Decoder rows per batch drop
-    from B + B·f1 + B·f1·f2 to the (padded) unique-frontier count — the
-    batch's duplication factor in decode throughput."""
+def sage_forward_frontier(params, fb: FrontierBatch, cfg: GNNConfig,
+                          backend=None) -> Array:
+    """Dedup-decode path: ONE batched decode-backend call over the unique
+    frontier (exactly the (U, m) shape the Pallas kernel wants), then cheap
+    gathers rebuild the per-level tensors.  Decoder rows per batch drop from
+    B + B·f1 + B·f1·f2 to the (padded) unique-frontier count — the batch's
+    duplication factor in decode throughput."""
     ecfg = cfg.embedding_config()
     ids = sharding.logical(fb.unique, "frontier")
-    hu = emb_lib.embed_lookup(params["embed"], ids, ecfg)           # (U, de)
+    hu = emb_lib.embed_lookup(params["embed"], ids, ecfg,
+                              backend=backend)                      # (U, de)
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]                                       # (B, de)
     h1 = hu[fb.index_maps[1]]                                       # (B, f1, de)
     h2 = hu[fb.index_maps[2]]                                       # (B, f1, f2, de)
     return _sage_combine(params, h0, h1, h2)
+
+
+def sage_forward_frontier_cached(params, fb: FrontierBatch, cfg: GNNConfig,
+                                 cache_state, backend=None):
+    """Hot-node-cached twin of ``sage_forward_frontier``.
+
+    The unique-frontier decode goes through a ``CachedDecodeBackend`` keyed
+    by node id: ids whose cached embedding is within the staleness budget are
+    served from the cache (no gradient — they are constants from an earlier
+    codebook version); the rest decode fresh through the backend and are
+    written back.  Returns ``(hidden, new_cache_state)``."""
+    from repro.core.backend import CachedDecodeBackend
+
+    ecfg = cfg.embedding_config()
+    cache = CachedDecodeBackend(staleness=ecfg.cache_staleness)
+    ids = sharding.logical(fb.unique, "frontier")
+    # frontier padding rows repeat unique[0] — mask them out of the cache so
+    # they don't burn LRU slots or skew the hit/miss accounting
+    valid = jnp.arange(ids.shape[0], dtype=jnp.int32) < fb.n_unique
+    hu, new_state = cache.lookup(
+        cache_state, ids,
+        lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,
+                                       backend=backend),
+        valid=valid)
+    hu = sharding.logical(hu, "frontier", None)
+    h0 = hu[fb.index_maps[0]]
+    h1 = hu[fb.index_maps[1]]
+    h2 = hu[fb.index_maps[2]]
+    return _sage_combine(params, h0, h1, h2), new_state
 
 
 # ---------------------------------------------------------------------------

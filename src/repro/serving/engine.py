@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LMConfig
+from repro.core import backend as backend_mod
 from repro.models.lm import init_cache, lm_forward
 from repro.train.step import make_prefill_step, make_serve_step
 
@@ -28,8 +29,24 @@ class GenerationResult:
 
 
 class DecodeEngine:
-    def __init__(self, cfg: LMConfig, params, s_max: int = 1024):
+    """``decode_backend`` pins the embedding decode path for serving
+    (compressed vocabularies re-decode token embeddings every step, so the
+    backend choice is on the serving hot path).  ``None`` keeps the config's
+    ``lookup_impl``; ``"auto"`` resolves to the fused pallas kernel on TPU
+    runtimes.  Unknown names fail here, at engine construction, not on the
+    first request."""
+
+    def __init__(self, cfg: LMConfig, params, s_max: int = 1024,
+                 decode_backend: Optional[str] = None):
+        if decode_backend is not None:
+            resolved = (backend_mod.resolve_auto()
+                        if decode_backend == "auto" else decode_backend)
+            backend_mod.get_backend(resolved)   # fail fast on unknown names
+            cfg = dataclasses.replace(
+                cfg, embedding=dataclasses.replace(
+                    cfg.embedding, lookup_impl=resolved))
         self.cfg = cfg
+        self.decode_backend = cfg.embedding.lookup_impl
         self.params = params
         self.s_max = s_max
         self._prefill = jax.jit(make_prefill_step(cfg, s_max))

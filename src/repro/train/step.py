@@ -105,38 +105,76 @@ def make_train_step(cfg: LMConfig, hyper: Optional[TrainHyper] = None) -> Callab
 
 
 def init_gnn_train_state(key, cfg: GNNConfig, codes=None, aux=None) -> Dict[str, Any]:
-    """Train state for the graph engine (same layout as the LM state)."""
+    """Train state for the graph engine (same layout as the LM state).
+
+    When the embedding config enables the hot-node decode cache
+    (``cache_capacity > 0`` on a compressed kind) the state carries a
+    ``"cache"`` entry (a ``core.backend.CacheState`` pytree) that the train
+    step threads through and version-bumps after each optimizer update."""
     from repro.graph.engine import GNNModel
     params = GNNModel(cfg).init(key, codes=codes, aux=aux)
-    return {"params": params, "opt": adamw_init(params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    ecfg = cfg.embedding_config()
+    if ecfg.is_compressed and ecfg.cache_capacity > 0:
+        from repro.core.backend import CacheState
+        state["cache"] = CacheState.create(
+            ecfg.cache_capacity, cfg.d_e, jnp.dtype(cfg.compute_dtype))
+    return state
 
 
 def make_gnn_train_step(cfg: GNNConfig,
-                        opt: Optional[AdamWConfig] = None) -> Callable:
+                        opt: Optional[AdamWConfig] = None,
+                        interpret: bool = False) -> Callable:
     """Node-classification train step over the unified ``GNNModel`` API.
 
     The batch is a dict from an engine batch source: either
     {"frontier": FrontierBatch, "labels": y} (dedup-decode path) or
     {"levels": tuple, "labels": y} (naive reference path) — the model
     dispatches on the batch view, so the step function is family-agnostic.
+
+    The embedding decode runs on the backend named by the config's
+    ``lookup_impl`` and gradients flow through that backend's (custom) VJP —
+    for ``pallas`` the fused kernel forward pairs with the XLA scatter-add
+    backward in ``kernels.hash_decode.ops``.  If the state carries a
+    ``"cache"`` entry, the frontier decode is served through the hot-node
+    cache, the updated cache rides along in the state, and its version is
+    bumped after the optimizer touches the decoder parameters (that bump is
+    what invalidates cached embeddings once they exceed the staleness
+    budget).
     """
+    from repro.core.backend import CachedDecodeBackend
     from repro.graph.engine import GNNModel, batch_view
     from repro.models import gnn
-    model = GNNModel(cfg)
+    model = GNNModel(cfg, interpret=interpret)
     ocfg = opt or AdamWConfig(lr=1e-2, weight_decay=0.0)
 
     def train_step(state, batch):
         view = batch_view(batch)
+        cached = "cache" in state
 
-        def loss_fn(p):
-            h = model.apply(p, view)
-            return gnn.node_loss(model.logits(p, h), batch["labels"])
+        if cached:
+            def loss_fn(p, c):
+                h, new_c = model.apply_cached(p, view, c)
+                return gnn.node_loss(model.logits(p, h), batch["labels"]), new_c
+            (loss, new_cache), g = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(
+                    state["params"], state["cache"])
+        else:
+            def loss_fn(p):
+                h = model.apply(p, view)
+                return gnn.node_loss(model.logits(p, h), batch["labels"])
+            loss, g = jax.value_and_grad(loss_fn, allow_int=True)(state["params"])
 
-        loss, g = jax.value_and_grad(loss_fn, allow_int=True)(state["params"])
         params, opt_state = adamw_update(state["params"], g, state["opt"], ocfg)
         new_state = {"params": params, "opt": opt_state, "step": state["step"] + 1}
-        return new_state, {"loss": loss}
+        metrics = {"loss": loss}
+        if cached:
+            new_cache = CachedDecodeBackend.bump_version(new_cache)
+            new_state["cache"] = new_cache
+            metrics["cache_hits"] = new_cache.hits
+            metrics["cache_misses"] = new_cache.misses
+        return new_state, metrics
 
     return train_step
 

@@ -1,0 +1,321 @@
+"""DecodeBackend layer tests (ISSUE 2): cross-backend parity (values and
+grads, aligned + unaligned shapes), backend selection/registration, the
+pallas frontier acceptance check, and the hot-node cache (hit/miss
+accounting, staleness-0 exactness through the streaming engine, bounded
+drift at staleness k, invalidation on version bump)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core import backend as backend_mod
+from repro.core import embedding as emb_lib
+from repro.core.backend import (CachedDecodeBackend, CacheState,
+                                DecodeBackend, available_backends,
+                                get_backend, register_backend)
+from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
+from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import GNNModel, SageBatchSource
+from repro.train.step import init_gnn_train_state, make_gnn_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _decode_setup(B, m=8, c=16, d_c=128, seed=0):
+    k = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(k, (B, m), 0, c)
+    cb = jax.random.normal(jax.random.fold_in(k, 1), (m, c, d_c))
+    w0 = jax.random.normal(jax.random.fold_in(k, 2), (d_c,))
+    return codes, cb, w0
+
+
+# ---------------------------------------------------------------------------
+# protocol / registry
+# ---------------------------------------------------------------------------
+
+def test_registry_and_selection():
+    assert {"gather", "onehot", "pallas"} <= set(available_backends())
+    assert get_backend("gather").name == "gather"
+    # auto: onehot on CPU CI, pallas on TPU
+    auto = get_backend("auto")
+    expected = "pallas" if jax.default_backend() == "tpu" else "onehot"
+    assert auto.name == expected
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        get_backend("nope")
+    # instances pass straight through
+    be = get_backend("onehot")
+    assert get_backend(be) is be
+
+
+def test_register_custom_backend():
+    class Doubler(DecodeBackend):
+        name = "doubler"
+
+        def decode(self, codes, codebooks, w0=None):
+            return 2.0 * backend_mod.GatherBackend().decode(codes, codebooks, w0)
+
+    register_backend("doubler", Doubler)
+    try:
+        codes, cb, w0 = _decode_setup(16)
+        a = get_backend("gather").decode(codes, cb, w0)
+        b = get_backend("doubler").decode(codes, cb, w0)
+        np.testing.assert_allclose(np.asarray(2.0 * a), np.asarray(b))
+    finally:
+        backend_mod._REGISTRY.pop("doubler", None)
+
+
+def test_backend_metadata():
+    pal = get_backend("pallas", interpret=True)
+    assert pal.capabilities.fused and "tpu" in pal.capabilities.accelerator
+    assert pal.preferred_pad % 8 == 0
+    assert get_backend("gather").capabilities.grad
+
+
+# ---------------------------------------------------------------------------
+# cross-backend parity (satellite: decode + grads, aligned and unaligned)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,d_c", [
+    (256, 128),    # aligned to (block, lane)
+    (100, 96),     # deliberately unaligned: pallas must pad, not fall back
+    (8, 384),
+])
+@pytest.mark.parametrize("with_w0", [False, True])
+def test_backend_parity_values_and_grads(B, d_c, with_w0):
+    codes, cb, w0 = _decode_setup(B, d_c=d_c)
+    w = w0 if with_w0 else None
+    backends = {
+        "gather": get_backend("gather"),
+        "onehot": get_backend("onehot"),
+        "pallas": get_backend("pallas", interpret=True),
+    }
+    outs, grads = {}, {}
+    for name, be in backends.items():
+        outs[name] = np.asarray(be.decode(codes, cb, w))
+
+        def loss(cb_, w0_, be=be):
+            return (be.decode(codes, cb_, w0_ if with_w0 else None) ** 2).sum()
+        grads[name] = jax.grad(loss, argnums=(0, 1))(cb, w0)
+
+    for name in ("onehot", "pallas"):
+        np.testing.assert_allclose(outs[name], outs["gather"],
+                                   rtol=1e-5, atol=1e-5)
+        for ga, gb in zip(grads[name], grads["gather"]):
+            np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_gather_pallas_bitwise():
+    """The gather oracle accumulates in the kernel's codebook order, so
+    parity with the fused kernel is bitwise, not approximate."""
+    codes, cb, w0 = _decode_setup(128, d_c=128)
+    a = get_backend("gather").decode(codes, cb, w0)
+    b = get_backend("pallas", interpret=True).decode(codes, cb, w0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decoder_drops_inline_branching():
+    """apply_decoder routes through the backend layer — unknown impl names
+    surface the registry error, and 'auto' is accepted."""
+    cfg = DecoderConfig(c=16, m=8, d_c=64, d_m=64, d_e=32, n_layers=2,
+                        compute_dtype="float32")
+    p = init_decoder(KEY, cfg)
+    codes = jax.random.randint(KEY, (16, cfg.m), 0, cfg.c)
+    out = apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="auto"))
+    assert out.shape == (16, cfg.d_e)
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        apply_decoder(p, codes, dataclasses.replace(cfg, lookup_impl="nope"))
+
+
+# ---------------------------------------------------------------------------
+# GNN frontier acceptance: pallas forward == gather oracle, bit-identical
+# ---------------------------------------------------------------------------
+
+N = 1200
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_graph(0, N, avg_degree=8, n_classes=8, homophily=0.9)
+
+
+def _gnn_cfg(**emb_kw):
+    base = paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5)
+    return dataclasses.replace(
+        base, embedding=dataclasses.replace(base.embedding, c=16, m=8,
+                                            d_c=128, d_m=64, **emb_kw))
+
+
+def test_frontier_pallas_bit_identical_to_gather(graph):
+    adj, _ = graph
+    cfg_g = _gnn_cfg(lookup_impl="gather")
+    cfg_p = _gnn_cfg(lookup_impl="pallas")
+    codes = emb_lib.make_codes(KEY, cfg_g.embedding_config(), aux=adj)
+    params = GNNModel(cfg_g).init(KEY, codes=codes)
+
+    sampler = NeighborSampler(adj, cfg_g.fanouts, max_deg=32, seed=0)
+    ids = np.random.default_rng(1).choice(N, 64, replace=False).astype(np.int32)
+    fb = jax.device_put(sampler.sample_frontier(
+        ids, rng=np.random.default_rng(2)))
+
+    h_gather = GNNModel(cfg_g).apply(params, fb)
+    h_pallas = GNNModel(cfg_p, interpret=True).apply(params, fb)
+    np.testing.assert_array_equal(np.asarray(h_gather), np.asarray(h_pallas))
+
+
+# ---------------------------------------------------------------------------
+# hot-node cache
+# ---------------------------------------------------------------------------
+
+def _ramp_decode(d):
+    def decode_fn(ids):
+        return jnp.broadcast_to(ids.astype(jnp.float32)[:, None], (ids.shape[0], d))
+    return decode_fn
+
+
+def test_cache_hit_miss_accounting():
+    cb = CachedDecodeBackend(staleness=1)
+    st = cb.init_state(4, 2)
+    decode_fn = _ramp_decode(2)
+    ids = jnp.array([1, 2, 3], jnp.int32)
+
+    out, st = cb.lookup(st, ids, decode_fn)           # cold: all miss
+    assert (int(st.hits), int(st.misses)) == (0, 3)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), [1, 2, 3])
+
+    out, st = cb.lookup(st, ids, decode_fn)           # same version: all hit
+    assert (int(st.hits), int(st.misses)) == (3, 3)
+
+    st = cb.bump_version(st)                          # age 1 <= staleness 1
+    out, st = cb.lookup(st, ids, decode_fn)
+    assert (int(st.hits), int(st.misses)) == (6, 3)
+
+    out, st = cb.lookup(st, jnp.array([9], jnp.int32), decode_fn)  # absent
+    assert (int(st.hits), int(st.misses)) == (6, 4)
+
+
+def test_cache_invalidation_on_version_bump():
+    cb = CachedDecodeBackend(staleness=0)
+    st = cb.init_state(4, 2)
+    decode_fn = _ramp_decode(2)
+    ids = jnp.array([5, 6], jnp.int32)
+    _, st = cb.lookup(st, ids, decode_fn)
+    _, st = cb.lookup(st, ids, decode_fn)
+    assert int(st.hits) == 2                          # same version: hits
+    st = cb.bump_version(st)                          # codebook update
+    _, st = cb.lookup(st, ids, decode_fn)
+    assert (int(st.hits), int(st.misses)) == (2, 4)   # all invalidated
+
+
+def test_cache_lru_eviction():
+    cb = CachedDecodeBackend(staleness=5)
+    st = cb.init_state(4, 1)
+    decode_fn = _ramp_decode(1)
+    _, st = cb.lookup(st, jnp.array([1, 2, 3, 4], jnp.int32), decode_fn)
+    _, st = cb.lookup(st, jnp.array([1, 2], jnp.int32), decode_fn)  # touch 1,2
+    _, st = cb.lookup(st, jnp.array([7, 8], jnp.int32), decode_fn)  # evict 3,4
+    held = set(np.asarray(st.node_ids).tolist())
+    assert held == {1, 2, 7, 8}
+
+
+def test_cache_overflow_does_not_corrupt_slots():
+    """More absent misses than free slots: the overflow must be dropped, not
+    scattered onto a protected slot (which would leave node_ids and values
+    disagreeing about which entity a slot holds)."""
+    cb = CachedDecodeBackend(staleness=0)
+    st = cb.init_state(4, 1)
+    dec = _ramp_decode(1)
+    _, st = cb.lookup(st, jnp.array([1, 2, 3], jnp.int32), dec)
+    st = cb.bump_version(st)                          # 1,2,3 now stale
+    _, st = cb.lookup(st, jnp.array([1, 2, 3, 7, 8, 9], jnp.int32), dec)
+    held = np.asarray(st.node_ids)
+    vals = np.asarray(st.values[:, 0])
+    for i, v in zip(held, vals):                      # decode is identity,
+        if i >= 0:                                    # so value must == id
+            assert float(v) == float(i), (held, vals)
+    assert {1, 2, 3} <= set(held.tolist())            # refreshed in place
+
+
+def test_cache_valid_mask_skips_padding_rows():
+    """Frontier padding rows (duplicates of row 0) must not burn LRU slots
+    or count in the hit/miss accounting."""
+    cb = CachedDecodeBackend(staleness=3)
+    st = cb.init_state(8, 1)
+    dec = _ramp_decode(1)
+    ids = jnp.array([5, 5, 5, 5], jnp.int32)          # row 0 real, rest pad
+    valid = jnp.array([True, False, False, False])
+    out, st = cb.lookup(st, ids, dec, valid=valid)
+    assert (int(st.hits), int(st.misses)) == (0, 1)
+    assert int((np.asarray(st.node_ids) == 5).sum()) == 1
+    out, st = cb.lookup(st, ids, dec, valid=valid)
+    assert (int(st.hits), int(st.misses)) == (1, 1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), [5, 5, 5, 5])
+
+
+def test_cache_grad_flows_only_through_misses():
+    cb = CachedDecodeBackend(staleness=3)
+    st = cb.init_state(4, 1)
+    w = jnp.array(2.0)
+
+    def f(w, st):
+        out, st = cb.lookup(st, jnp.array([5], jnp.int32),
+                            lambda i: w * jnp.ones((1, 1)))
+        return out.sum(), st
+
+    (_, st), g_miss = jax.value_and_grad(f, has_aux=True)(w, st)
+    (_, _), g_hit = jax.value_and_grad(f, has_aux=True)(w, st)
+    assert float(g_miss) == 1.0     # fresh decode: gradient flows
+    assert float(g_hit) == 0.0      # cached row is a stale constant
+
+
+def test_cache_state_is_checkpointable_pytree():
+    st = CacheState.create(8, 4)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert st2.capacity == 8 and st2.values.shape == (8, 4)
+
+
+# ---------------------------------------------------------------------------
+# streaming-engine acceptance: staleness 0 == uncached, staleness k bounded
+# ---------------------------------------------------------------------------
+
+def _train(graph, cfg, steps=10, batch=64):
+    adj, labels = graph
+    codes = emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj)
+    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=32, seed=0)
+    src = SageBatchSource(sampler, np.arange(N), labels, batch, seed=7,
+                          pad_to=128)
+    state = init_gnn_train_state(jax.random.PRNGKey(1), cfg, codes=codes)
+    step = jax.jit(make_gnn_train_step(cfg))
+    losses, metrics = [], {}
+    for _ in range(steps):
+        state, metrics = step(state, jax.device_put(src.next_batch()))
+        losses.append(float(metrics["loss"]))
+    return losses, metrics
+
+
+def test_cached_staleness0_exact_on_streaming_engine(graph):
+    """Acceptance: CachedDecodeBackend at staleness 0 reproduces uncached
+    training losses EXACTLY over 10 streaming-engine steps."""
+    l_plain, _ = _train(graph, _gnn_cfg())
+    l_cached, m = _train(graph, _gnn_cfg(cache_capacity=256,
+                                         cache_staleness=0))
+    assert l_plain == l_cached      # bit-identical, not approximately equal
+    # staleness 0 + per-step version bump: every access re-decodes
+    assert int(m["cache_hits"]) == 0
+    assert int(m["cache_misses"]) > 0
+
+
+def test_cached_staleness_k_bounded_drift(graph):
+    l_plain, _ = _train(graph, _gnn_cfg())
+    l_stale, m = _train(graph, _gnn_cfg(cache_capacity=1024,
+                                        cache_staleness=4))
+    assert int(m["cache_hits"]) > 0                   # the cache actually hits
+    gaps = [abs(a - b) for a, b in zip(l_plain, l_stale)]
+    assert gaps[0] == 0.0                             # first step: cold cache
+    assert all(np.isfinite(l_stale))
+    assert max(gaps) < 0.5, f"stale-cache loss drift unbounded: {max(gaps)}"

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Single CI entry point (ISSUE 2 satellite).
+#
+#   tools/ci.sh           import gate + tier-1 pytest
+#   tools/ci.sh --bench   ... plus the benchmark suite in --smoke mode
+#                         (2 steps per benchmark: exercises every module's
+#                         code path so benchmarks can't silently rot)
+#
+# Mirrors ROADMAP "Tier-1 verify": import/collection health is a gate that
+# runs BEFORE the suite, so a broken optional dep fails loudly here instead
+# of erroring collection of unrelated test modules.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== [1/2] import-health gate =="
+python tools/check_imports.py
+
+echo "== [2/2] tier-1 pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== [extra] benchmark smoke =="
+    python -m benchmarks.run --smoke
+fi
+
+echo "CI OK"
