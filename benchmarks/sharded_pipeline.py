@@ -1,0 +1,137 @@
+"""Sharded streaming pipeline benchmark (ISSUE 3).
+
+Times the end-to-end streaming GNN train step — stacked per-shard frontiers
+(``ShardedSageBatchSource``) decoded through the ``"sharded"`` backend — at
+1 and 4 shards, and checks the step-0 forward-loss bit-identity contract the
+tests assert.  Emits the usual CSV rows AND writes ``BENCH_shard.json``.
+
+The measurement runs in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the 4-shard leg
+exercises a real 4-device mesh even though the benchmark suite itself must
+keep a single-device view (tests/conftest.py).  Reading the numbers on this
+CPU container: forced host devices share the same cores, so the 4-shard
+``step_us`` measures *overhead* of the sharded path (shard_map + all_gather
++ psum), not speedup — ``frontier_rows_per_device`` (the per-device decode
+cost, padding included) vs the 1-shard row count is the scaling axis on real
+multi-host hardware.  ``unique_rows_per_device`` is the *measured* mean
+unique count per device: the gap between the two is worst-case
+``frontier_cap`` padding plus cross-shard duplicates, i.e. the decode work a
+tighter cap / cross-shard dedup (ROADMAP "Next") would reclaim.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit, steps
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_shard.json"
+
+_WORKER = """
+import dataclasses, json, sys, time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core import embedding as emb_lib
+from repro.graph import NeighborSampler, powerlaw_graph
+from repro.graph.engine import PrefetchIterator, ShardedSageBatchSource
+from repro.parallel.policy import make_frontier_placement
+from repro.train import init_gnn_train_state, make_gnn_train_step
+
+N_NODES, N_CLASSES, BATCH, FANOUT = 8000, 8, 256, 10
+KEY = jax.random.PRNGKey(0)
+n_steps = int(sys.argv[1])
+
+adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
+                             n_classes=N_CLASSES, homophily=0.9)
+base = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                        fanout=FANOUT)
+cfg = dataclasses.replace(base, embedding=dataclasses.replace(
+    base.embedding, c=16, m=8, d_c=128, d_m=64, lookup_impl="sharded:gather"))
+codes = np.asarray(emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj))
+sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
+
+def run(n_shards):
+    mesh = (Mesh(np.asarray(jax.devices()[:n_shards]), ("data",))
+            if n_shards > 1 else None)
+    src = ShardedSageBatchSource(sampler, np.arange(N_NODES), labels,
+                                 BATCH // n_shards, n_shards=n_shards, seed=1)
+    place = make_frontier_placement(mesh) if mesh is not None else None
+    state = init_gnn_train_state(KEY, cfg, codes=codes)
+    step = jax.jit(make_gnn_train_step(cfg, mesh=mesh), donate_argnums=(0,))
+    it = PrefetchIterator(src, depth=2, device=place)
+    losses, uniq, t0 = [], [], None
+    try:
+        for i in range(n_steps):
+            batch = it.next_batch()
+            uniq.append(int(np.asarray(batch["frontier"].n_unique)))
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))   # blocks
+            if i == 0:
+                t0 = time.perf_counter()            # first step pays compile
+    finally:
+        it.close()
+    per_step = (time.perf_counter() - t0) / max(n_steps - 1, 1) * 1e6
+    return {"n_shards": n_shards, "step_us": per_step, "losses": losses,
+            "frontier_rows_total": n_shards * src.frontier_cap,
+            "frontier_rows_per_device": src.frontier_cap,
+            "unique_rows_per_device": sum(uniq) / len(uniq) / n_shards}
+
+out = {"device_count": jax.device_count(),
+       "workload": {"n_nodes": N_NODES, "batch": BATCH,
+                    "fanouts": [FANOUT, FANOUT], "steps": n_steps,
+                    "lookup_impl": cfg.embedding.lookup_impl},
+       "runs": {f"{r['n_shards']}shard": r for r in (run(1), run(4))}}
+out["step0_loss_bit_identical"] = (
+    out["runs"]["1shard"]["losses"][0] == out["runs"]["4shard"]["losses"][0])
+print("BENCH_JSON:" + json.dumps(out))
+"""
+
+
+def run():
+    n_steps = steps(12)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        ":" + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _WORKER, str(n_steps)],
+        capture_output=True, text=True, env=env, cwd=str(ROOT), timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded_pipeline worker failed:\n{proc.stdout}\n{proc.stderr}")
+    payload = [l for l in proc.stdout.splitlines() if l.startswith("BENCH_JSON:")]
+    report = json.loads(payload[-1][len("BENCH_JSON:"):])
+
+    for label, r in report["runs"].items():
+        emit(f"sharded_pipeline/{label}/step", r["step_us"],
+             f"rows/device={r['frontier_rows_per_device']} "
+             f"unique/device={r['unique_rows_per_device']:.0f} "
+             f"loss0={r['losses'][0]:.6f}")
+    ident = report["step0_loss_bit_identical"]
+    emit("sharded_pipeline/step0_bit_identical", 0.0, str(ident))
+    if not ident:
+        raise AssertionError(
+            "1-shard vs 4-shard step-0 forward loss diverged: "
+            f"{report['runs']['1shard']['losses'][0]} vs "
+            f"{report['runs']['4shard']['losses'][0]}")
+
+    # smoke runs exercise the code path but must not clobber the committed
+    # real-measurement datapoint with 2-step throwaway numbers
+    from benchmarks import common
+    if common.SMOKE:
+        emit("sharded_pipeline/json", 0.0,
+             f"smoke: skipped writing {OUT_PATH.name}")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        emit("sharded_pipeline/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -6,7 +6,7 @@ routes through one ``DecodeBackend``:
 
     decode(codes (B, m) int32, codebooks (m, c, d_c), w0 (d_c,)?) -> (B, d_c) f32
 
-Three implementations are registered:
+Four implementations are registered:
 
   gather   m sequential gathers accumulated in f32 — the paper's GPU
            formulation and the bit-exactness oracle (accumulation order
@@ -17,10 +17,14 @@ Three implementations are registered:
            explicitly zero-padded to tile/block multiples here (a warning is
            emitted once) instead of silently falling back to the reference
            path.
+  sharded  data-parallel decode: frontier rows partitioned over the active
+           mesh's data axis, decoded shard-local (``shard_map``) by a base
+           backend (``"sharded:gather"`` pins it), rows all_gathered forward
+           and codebook/W0 cotangents psummed in the custom VJP.
 
 Selection is by config string (``lookup_impl``): a backend name, or ``auto``
-which picks ``pallas`` on TPU-capable runtimes and ``onehot`` otherwise.
-New backends (e.g. a sharded multi-host decode) register via
+which picks ``sharded`` under a multi-device mesh, ``pallas`` on TPU-capable
+runtimes and ``onehot`` otherwise.  New backends register via
 ``register_backend`` and become selectable by name everywhere at once.
 
 ``CachedDecodeBackend`` layers a device-resident LRU of *decoded embeddings*
@@ -187,6 +191,116 @@ class PallasBackend(DecodeBackend):
 
 
 # ---------------------------------------------------------------------------
+# sharded (data-parallel) decode
+# ---------------------------------------------------------------------------
+
+def _sharded_decode(base: DecodeBackend, mesh, axis: str,
+                    codes: Array, codebooks: Array, w0: Array) -> Array:
+    """Row-partitioned decode under ``shard_map``: each device decodes its
+    block of frontier rows against the replicated codebooks, the forward
+    ``all_gather``s the decoded rows, and the custom VJP ``psum``s the
+    codebook/W0 cotangents so the replicated parameters see the full-batch
+    gradient.  (shard_map with ``check_vma=False`` does not insert the
+    replicated-input psum itself — spelling the VJP out keeps gradients
+    correct by construction.)"""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map
+
+    @jax.custom_vjp
+    def decode(codes, cb, w0):
+        def local(codes_l, cb_, w0_):
+            out_l = base.decode(codes_l, cb_, w0_)
+            return jax.lax.all_gather(out_l, axis, axis=0, tiled=True)
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None), P(None, None, None), P(None)),
+            out_specs=P(None, None), check_vma=False)(codes, cb, w0)
+
+    def fwd(codes, cb, w0):
+        return decode(codes, cb, w0), (codes, cb, w0)
+
+    def bwd(res, g):
+        codes, cb, w0 = res
+
+        def local(codes_l, g_l, cb_, w0_):
+            _, vjp = jax.vjp(
+                lambda c, s: base.decode(codes_l, c, s), cb_, w0_)
+            gcb, gw0 = vjp(g_l)
+            return jax.lax.psum(gcb, axis), jax.lax.psum(gw0, axis)
+
+        gcb, gw0 = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(None, None, None),
+                      P(None)),
+            out_specs=(P(None, None, None), P(None)),
+            check_vma=False)(codes, g, cb, w0)
+        return None, gcb, gw0      # codes are integers: no gradient
+
+    decode.defvjp(fwd, bwd)
+    return decode(codes, codebooks, w0)
+
+
+class ShardedBackend(DecodeBackend):
+    """Data-parallel decode: frontier rows are partitioned across the mesh's
+    data axis and decoded shard-local by a wrapped base backend (each shard's
+    batch source already groups its rows contiguously, so no resharding
+    happens on the hot path).  Codebooks stay replicated — they are ≤ 10 MB,
+    which IS the paper's point; what doesn't fit one host at industrial scale
+    is the *frontier decode work*, and that is what shards here.
+
+    The mesh is read from the ``use_sharding`` context at trace time (or
+    pinned via ``mesh=``); with no mesh or a 1-sized data axis the backend
+    degrades to a plain base-backend call, so single-device runs of a
+    ``lookup_impl="sharded"`` config are exact no-ops.  The base accumulates
+    per row independently, so a row's decoded value is invariant to which
+    shard holds it — the 1-shard and N-shard runs agree bitwise.
+    """
+
+    name = "sharded"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+
+    def __init__(self, base: Optional[object] = None, axis: Optional[str] = None,
+                 mesh=None, interpret: bool = False):
+        if base is None:
+            base = "pallas" if jax.default_backend() == "tpu" else "onehot"
+        if isinstance(base, str) and base.split(":")[0] == "sharded":
+            raise ValueError("sharded backend cannot wrap itself")
+        self.base = get_backend(base, interpret=interpret)
+        self.axis = axis
+        self.mesh = mesh
+        self.preferred_pad = self.base.preferred_pad
+
+    def _mesh_axis(self):
+        from repro.parallel import sharding as sh
+        mesh = self.mesh if self.mesh is not None else sh.current_mesh()
+        if mesh is None:
+            return None, None
+        return mesh, (self.axis or sh.data_axis(mesh))
+
+    def decode(self, codes, codebooks, w0=None):
+        mesh, axis = self._mesh_axis()
+        k = mesh.shape[axis] if mesh is not None else 1
+        if k <= 1:
+            return self.base.decode(codes, codebooks, w0)
+        B = codes.shape[0]
+        B_pad = _round_up(B, k)
+        if B_pad != B:
+            _warn_once(
+                f"sharded-pad-b-{B}-{k}",
+                f"sharded decode: padding batch {B} -> {B_pad} to split over "
+                f"{k} shards; pad frontiers to a multiple of the shard count "
+                f"(e.g. frontier_cap) to avoid the copy")
+            codes = jnp.pad(codes, ((0, B_pad - B), (0, 0)))
+        if w0 is None:
+            # keep one shard_map signature: multiplying by exactly 1.0 is a
+            # bitwise no-op, and the dummy's cotangent is simply discarded
+            w0 = jnp.ones((codebooks.shape[2],), jnp.float32)
+        out = _sharded_decode(self.base, mesh, axis, codes, codebooks, w0)
+        return out[:B]
+
+
+# ---------------------------------------------------------------------------
 # registry / selection
 # ---------------------------------------------------------------------------
 
@@ -202,6 +316,7 @@ def register_backend(name: str, factory: Callable[..., DecodeBackend]) -> None:
 register_backend("gather", GatherBackend)
 register_backend("onehot", OnehotBackend)
 register_backend("pallas", PallasBackend)
+register_backend("sharded", ShardedBackend)
 
 
 def available_backends() -> Tuple[str, ...]:
@@ -209,22 +324,39 @@ def available_backends() -> Tuple[str, ...]:
 
 
 def resolve_auto() -> str:
+    """``auto`` resolution: the sharded decode when tracing under a mesh
+    whose data axis is actually split, else the fused kernel on TPU runtimes
+    and the MXU-friendly XLA formulation everywhere else."""
+    from repro.parallel.sharding import data_axis_size
+    if data_axis_size() > 1:
+        return "sharded"
     return "pallas" if jax.default_backend() == "tpu" else "onehot"
 
 
 def get_backend(spec, *, interpret: bool = False) -> DecodeBackend:
     """Resolve a backend from a config string (or pass an instance through).
 
-    ``auto`` picks the fused kernel on TPU runtimes and the MXU-friendly
-    XLA formulation elsewhere.  ``interpret`` only affects ``pallas``."""
+    ``auto`` picks the sharded decode under a multi-device mesh, the fused
+    kernel on TPU runtimes and the MXU-friendly XLA formulation elsewhere.
+    ``sharded`` accepts an optional base-backend suffix — ``"sharded:gather"``
+    decodes shard-local through the gather oracle (bitwise-stable row
+    accumulation).  ``interpret`` affects ``pallas`` (directly or as a
+    sharded base)."""
     if isinstance(spec, DecodeBackend):
         return spec
     name = spec or "auto"
     if name == "auto":
         name = resolve_auto()
+    name, _, option = name.partition(":")
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown decode backend {name!r}; known: {available_backends()}")
+    if name == "sharded":
+        return _REGISTRY[name](base=option or None, interpret=interpret)
+    if option:
+        raise ValueError(
+            f"decode backend {name!r} takes no ':{option}' option "
+            f"(only 'sharded:<base>' does)")
     if name == "pallas":
         return _REGISTRY[name](interpret=interpret)
     return _REGISTRY[name]()

@@ -22,8 +22,17 @@ Three pieces restructure the minibatch path end to end:
   special-casing the model family.
 
 Batch sources are deterministic per step index (each batch is a pure
-function of ``(seed, step)``), which is what makes prefetching, crash
-resume and the sync/async equivalence tests exact rather than statistical.
+function of ``(seed, shard, step)``), which is what makes prefetching, crash
+resume, data-parallel sharding and the sync/async equivalence tests exact
+rather than statistical.
+
+* **Sharded streaming** — ``SageBatchSource(shard=s, n_shards=N)`` slices
+  one global per-step batch (same ``TokenStream`` contract);
+  ``ShardedSageBatchSource`` stacks the N per-shard frontiers into a single
+  batch whose rows are grouped per shard, so the ``"sharded"`` decode
+  backend (``repro.core.backend``) decodes shard-local under ``shard_map``
+  and an N-shard run is a config change (mesh + ``lookup_impl``), not new
+  code.
 """
 
 from __future__ import annotations
@@ -136,20 +145,52 @@ def _step_rng(seed: int, step: int) -> np.random.Generator:
     return np.random.default_rng((seed * 1_000_003 + 12_582_917) + step)
 
 
+def default_frontier_cap(batch_size: int, fanouts, pad_to: int,
+                         n_nodes: int) -> int:
+    """Exact per-shard frontier size: the worst-case unique count (every
+    sampled position distinct, bounded by the graph), rounded up to the
+    padding multiple so stacked shard segments stay backend-aligned.
+
+    Worst case is the *safe* default — an undersized cap raises mid-run —
+    but real frontiers dedup far below it, so the stacked batch decodes
+    padding rows (see BENCH_shard.json rows-vs-unique columns).  Runs that
+    know their workload should pass a measured ``frontier_cap``."""
+    worst = batch_size
+    per_target = 1
+    for f in fanouts:
+        per_target *= f
+        worst += batch_size * per_target
+    cap = min(worst, int(n_nodes))
+    return -(-cap // max(pad_to, 1)) * max(pad_to, 1)
+
+
 class SageBatchSource:
     """Per-step GraphSAGE batch source over a node pool with labels.
 
-    Each ``next_batch`` draws ``batch_size`` nodes and samples their
-    neighbourhood with a generator seeded by ``(seed, step)`` — the batch
-    sequence is a pure function of the step counter, so ``state_dict`` is
-    just the step and resume / prefetch replay are exact.
+    Deterministic in ``(seed, shard, step)`` — the same contract as
+    ``data.tokens.TokenStream``: each step draws one *global* batch of
+    ``batch_size * n_shards`` nodes from an rng seeded by ``(seed, step)``
+    (identical on every shard), takes the shard's contiguous slice, and
+    samples neighbourhoods counter-based (``NeighborSampler.sample_hashed``)
+    keyed by the target's global batch position.  The union of the N shard
+    batches is therefore *bit-identical* to the batch an ``n_shards=1``
+    source of batch size ``batch_size * n_shards`` produces, and
+    ``state_dict`` is just the step, so resume / prefetch replay stay exact
+    per shard.
 
     ``dedup=True`` emits {"frontier": FrontierBatch, "labels": y};
     ``dedup=False`` emits {"levels": tuple, "labels": y} (naive reference).
+    ``frontier_cap`` pads every frontier to that exact row count (sharded
+    runs stack equal-size per-shard frontiers; ``None`` keeps the usual
+    round-up-to-``pad_to`` padding).
     """
 
     def __init__(self, sampler: NeighborSampler, nodes, labels, batch_size: int,
-                 seed: int = 0, dedup: bool = True, pad_to: int = 256):
+                 seed: int = 0, dedup: bool = True, pad_to: int = 256,
+                 shard: int = 0, n_shards: int = 1,
+                 frontier_cap: Optional[int] = None):
+        if not 0 <= shard < n_shards:
+            raise ValueError(f"shard {shard} out of range for {n_shards} shards")
         self.sampler = sampler
         self.nodes = np.asarray(nodes)
         self.labels = np.asarray(labels)
@@ -157,27 +198,112 @@ class SageBatchSource:
         self.seed = int(seed)
         self.dedup = dedup
         self.pad_to = pad_to
+        self.shard = int(shard)
+        self.n_shards = int(n_shards)
+        self.frontier_cap = frontier_cap
         self.step = 0
 
     def next_batch(self) -> Dict[str, Any]:
+        from repro.graph import sampler as sampler_mod
         rng = _step_rng(self.seed, self.step)
+        key = sampler_mod.stream_key(self.seed, self.step)
         self.step += 1
-        replace = self.batch_size > self.nodes.shape[0]
-        ids = rng.choice(self.nodes, self.batch_size, replace=replace).astype(np.int32)
+        global_b = self.batch_size * self.n_shards
+        replace = global_b > self.nodes.shape[0]
+        # the global draw is shard-independent; every shard consumes the rng
+        # identically and keeps only its contiguous slice
+        ids_g = rng.choice(self.nodes, global_b, replace=replace).astype(np.int32)
+        lo = self.shard * self.batch_size
+        ids = ids_g[lo:lo + self.batch_size]
+        gpos = np.arange(lo, lo + self.batch_size, dtype=np.uint64)
         y = self.labels[ids].astype(np.int32)
+        levels = self.sampler.sample_hashed(ids, gpos, key)
         if self.dedup:
-            fb = self.sampler.sample_frontier(ids, pad_to=self.pad_to, rng=rng)
+            fb = FrontierBatch.from_levels(levels, pad_to=self.pad_to,
+                                           cap=self.frontier_cap)
             return {"frontier": fb, "labels": y}
-        return {"levels": tuple(self.sampler.sample(ids, rng=rng)), "labels": y}
+        return {"levels": tuple(levels), "labels": y}
 
     # -- checkpointable state -------------------------------------------
     def state_dict(self) -> Dict[str, int]:
-        return {"step": self.step, "seed": self.seed}
+        return {"step": self.step, "seed": self.seed,
+                "shard": self.shard, "n_shards": self.n_shards}
 
     def load_state_dict(self, state: Dict[str, int]) -> None:
         assert int(state["seed"]) == self.seed, \
             "restoring a sage batch source from a different run"
+        assert (int(state.get("shard", 0)) == self.shard
+                and int(state.get("n_shards", 1)) == self.n_shards), \
+            "restoring a sage batch source onto a different shard layout"
         self.step = int(state["step"])
+
+
+class ShardedSageBatchSource:
+    """All-shard view of the sharded stream: N per-shard ``SageBatchSource``s
+    advanced in lockstep, their batches stacked into one *global* batch.
+
+    The stacked frontier groups rows per shard — row block ``s`` is shard
+    ``s``'s frontier, padded to exactly ``frontier_cap`` rows — so placing
+    the ``unique`` axis on the mesh's data axis (``policy.
+    frontier_batch_shardings``) puts each shard's rows on its own device and
+    the ``"sharded"`` decode backend runs shard-local with zero resharding.
+    Index maps are offset into the owning shard's block; cross-shard
+    duplicate nodes decode once *per shard* (the price of skipping a global
+    dedup synchronisation — exactly the multi-host trade).  ``valid`` marks
+    each block's genuine prefix, since padding is interleaved per shard
+    rather than a global suffix.
+
+    In a true multi-host deployment each host runs only its own
+    ``SageBatchSource(shard=s)``; this class is the single-process stand-in
+    that drives all shards for tests, benchmarks and the forced-host-device
+    CI leg.
+    """
+
+    def __init__(self, sampler: NeighborSampler, nodes, labels,
+                 batch_size: int, n_shards: int, seed: int = 0,
+                 pad_to: int = 256, frontier_cap: Optional[int] = None):
+        if frontier_cap is None:
+            frontier_cap = default_frontier_cap(
+                batch_size, sampler.fanouts, pad_to, sampler.table.shape[0])
+        self.n_shards = int(n_shards)
+        self.frontier_cap = int(frontier_cap)
+        self.seed = int(seed)
+        self.shards = [
+            SageBatchSource(sampler, nodes, labels, batch_size, seed=seed,
+                            pad_to=pad_to, shard=s, n_shards=n_shards,
+                            frontier_cap=self.frontier_cap)
+            for s in range(self.n_shards)
+        ]
+
+    def next_batch(self) -> Dict[str, Any]:
+        parts = [s.next_batch() for s in self.shards]
+        cap = self.frontier_cap
+        fbs = [p["frontier"] for p in parts]
+        unique = np.concatenate([np.asarray(fb.unique) for fb in fbs])
+        n_levels = len(fbs[0].index_maps)
+        maps = tuple(
+            np.concatenate([np.asarray(fb.index_maps[i]) + s * cap
+                            for s, fb in enumerate(fbs)], axis=0)
+            for i in range(n_levels))
+        valid = np.concatenate([
+            np.arange(cap, dtype=np.int32) < int(fb.n_unique) for fb in fbs])
+        n_unique = np.int32(sum(int(fb.n_unique) for fb in fbs))
+        labels = np.concatenate([p["labels"] for p in parts])
+        return {"frontier": FrontierBatch(unique, maps, n_unique, valid),
+                "labels": labels}
+
+    # -- checkpointable state -------------------------------------------
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.shards[0].step, "seed": self.seed,
+                "n_shards": self.n_shards}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        assert int(state["seed"]) == self.seed, \
+            "restoring a sharded sage batch source from a different run"
+        assert int(state.get("n_shards", 1)) == self.n_shards, \
+            "restoring a sharded sage batch source onto a different shard count"
+        for sh in self.shards:
+            sh.step = int(state["step"])
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +317,11 @@ class PrefetchIterator:
     ``jax.device_put``s the result, keeping up to ``depth`` batches in
     flight, so host-side numpy sampling and the H2D copy overlap with the
     jitted step consuming the previous batch.
+
+    ``device`` may be a jax device/sharding (forwarded to
+    ``jax.device_put``) or a *callable* ``batch -> placed_batch`` — sharded
+    runs pass ``policy.make_frontier_placement(mesh)`` so each shard's
+    frontier rows land on their own device straight off the host thread.
 
     Resume semantics: each queue item carries the source state captured
     *after* producing that batch; ``state_dict()`` returns the state of the
@@ -234,7 +365,10 @@ class PrefetchIterator:
                         return
                     batch = self.source.next_batch()
                     state = self._snapshot()
-                batch = jax.device_put(batch, self._device)
+                if callable(self._device):
+                    batch = self._device(batch)
+                else:
+                    batch = jax.device_put(batch, self._device)
                 item = (batch, state)
                 while not stop.is_set():
                     try:

@@ -16,7 +16,23 @@ in one ``(B, f1, f2)`` tensor.  ``FrontierBatch`` carries the *unique* node
 frontier plus int32 index maps per level, so the embedding decoder runs once
 per unique node and the per-level tensors are rebuilt with cheap gathers
 (``unique[index_maps[i]] == levels[i]``).  The frontier is padded to a
-multiple of ``pad_to`` so jit sees a small, bounded set of shapes.
+multiple of ``pad_to`` so jit sees a small, bounded set of shapes (or to an
+exact ``cap`` so sharded runs can stack equal-size per-shard frontiers).
+
+Sharded sampling (``sample_hashed``): multi-host data parallelism slices one
+*global* batch across shards, and every target's neighbour subtree must be
+reproducible no matter which shard draws it.  Stateful generators can't give
+that (the draw for position i depends on how many positions preceded it), so
+neighbour slots are counter-based: slot k under the subtree node at path
+``p`` is ``mix64(level_key ^ (p * PATH_STRIDE + k + 1)) % degree``, where
+``level_key`` folds the tree level into ``stream_key(seed, step)``.  Path
+counters are unique *within* a level by construction (children of distinct
+parents get distinct counter ranges); the per-level key makes cross-level
+counter reuse harmless — without it, a global batch larger than the path
+stride would correlate a deep target's draws with a shallow child's.  The
+draw is a pure function of ``(seed, step, global position, path)`` —
+slicing the batch by shard cannot change any subtree, which is what makes
+the N-shard union bit-identical to the 1-shard batch.
 """
 
 from __future__ import annotations
@@ -28,6 +44,28 @@ import jax
 import numpy as np
 
 from repro.graph.csr import CSRMatrix
+
+# Counter layout for hashed sampling: a subtree node at path id p draws its
+# k-th neighbour from counter p*_PATH_STRIDE + k + 1 (the +1 keeps child path
+# ids distinct from their parent).  Fanouts must stay below the stride.
+_PATH_STRIDE = np.uint64(1024)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finaliser — a bijective avalanche mix on uint64."""
+    with np.errstate(over="ignore"):
+        x = np.asarray(x, np.uint64)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+def stream_key(seed: int, step: int) -> np.uint64:
+    """Per-(seed, step) key for counter-based sampling — shard-independent,
+    so every shard of one step draws from the same keyed hash function."""
+    with np.errstate(over="ignore"):
+        k = np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15) + np.uint64(step)
+    return np.uint64(_mix64(k))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -42,29 +80,51 @@ class FrontierBatch:
                    level shapes: (B,), (B, f1), (B, f1, f2), ...
     ``n_unique``   () int32 — true unique count before padding (a leaf, not
                    static metadata, so varying it never retriggers jit).
+    ``valid``      optional (U_pad,) bool — explicit non-padding-row mask.
+                   ``None`` (the single-frontier case) means the prefix mask
+                   ``arange(U_pad) < n_unique``; sharded *stacked* batches
+                   (``ShardedSageBatchSource``) carry per-shard segments
+                   whose padding is interleaved, so they set it explicitly.
     """
 
     unique: np.ndarray
     index_maps: Tuple[np.ndarray, ...]
     n_unique: np.ndarray
+    valid: Optional[np.ndarray] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
-        return (self.unique, self.n_unique) + tuple(self.index_maps), None
+        leaves = (self.unique, self.n_unique) + tuple(self.index_maps)
+        if self.valid is not None:
+            return leaves + (self.valid,), True
+        return leaves, False
 
     @classmethod
-    def tree_unflatten(cls, _aux, leaves):
+    def tree_unflatten(cls, has_valid, leaves):
+        if has_valid:
+            return cls(leaves[0], tuple(leaves[2:-1]), leaves[1], leaves[-1])
         return cls(leaves[0], tuple(leaves[2:]), leaves[1])
 
     # -- construction ----------------------------------------------------
     @classmethod
-    def from_levels(cls, levels: Sequence[np.ndarray], pad_to: int = 256) -> "FrontierBatch":
-        """Dedup a naive level list into a frontier + per-level index maps."""
+    def from_levels(cls, levels: Sequence[np.ndarray], pad_to: int = 256,
+                    cap: Optional[int] = None) -> "FrontierBatch":
+        """Dedup a naive level list into a frontier + per-level index maps.
+
+        ``cap`` pads the frontier to exactly that many rows instead of the
+        next ``pad_to`` multiple — sharded runs need every shard's frontier
+        the same size so the stacked (n_shards·cap,) axis splits evenly
+        across devices.  Raises when the true unique count exceeds it."""
         levels = [np.asarray(l) for l in levels]
         flat = np.concatenate([l.ravel() for l in levels])
         uniq, inv = np.unique(flat, return_inverse=True)
         n_unique = uniq.shape[0]
-        cap = -(-n_unique // max(pad_to, 1)) * max(pad_to, 1)
+        if cap is None:
+            cap = -(-n_unique // max(pad_to, 1)) * max(pad_to, 1)
+        elif n_unique > cap:
+            raise ValueError(
+                f"frontier has {n_unique} unique nodes > cap={cap}; raise "
+                f"frontier_cap (or shrink batch/fanout)")
         if cap > n_unique:
             uniq = np.concatenate(
                 [uniq, np.full(cap - n_unique, uniq[0], uniq.dtype)])
@@ -73,6 +133,13 @@ class FrontierBatch:
             maps.append(inv[off:off + l.size].reshape(l.shape).astype(np.int32))
             off += l.size
         return cls(uniq.astype(np.int32), tuple(maps), np.int32(n_unique))
+
+    def valid_mask(self):
+        """(U_pad,) bool — True on genuine (non-padding) frontier rows."""
+        if self.valid is not None:
+            return self.valid
+        import jax.numpy as jnp
+        return jnp.arange(self.unique.shape[0], dtype=jnp.int32) < self.n_unique
 
     @property
     def targets(self):
@@ -122,6 +189,48 @@ class NeighborSampler:
                         rng: Optional[np.random.Generator] = None) -> FrontierBatch:
         """Sample and dedup in one call (the engine's fast path)."""
         return FrontierBatch.from_levels(self.sample(batch_nodes, rng=rng), pad_to=pad_to)
+
+    # -- counter-based (shard-sliceable) sampling ------------------------
+    def _sample_level_hashed(self, nodes: np.ndarray, path_ids: np.ndarray,
+                             fanout: int, key: np.uint64):
+        """Hashed twin of ``_sample_level``: neighbour slot k of the subtree
+        node at path id p draws ``mix64(key ^ (p*STRIDE + k + 1)) % deg`` —
+        no generator state, so any slice of the batch reproduces exactly.
+        Returns (neighbours, child path ids)."""
+        if fanout >= int(_PATH_STRIDE):
+            raise ValueError(f"fanout {fanout} >= path stride {_PATH_STRIDE}")
+        flat = nodes.reshape(-1)
+        pids = path_ids.reshape(-1).astype(np.uint64)
+        deg = np.minimum(self.deg[flat], self.max_deg)
+        with np.errstate(over="ignore"):
+            counters = (pids[:, None] * _PATH_STRIDE
+                        + np.arange(1, fanout + 1, dtype=np.uint64))
+            u = _mix64(counters ^ key)
+        idx = (u % np.maximum(deg, 1)[:, None].astype(np.uint64)).astype(np.int64)
+        nbr = self.table[flat[:, None], idx]
+        nbr = np.where(nbr < 0, flat[:, None], nbr)   # isolated: self-sample
+        return (nbr.reshape(*nodes.shape, fanout).astype(np.int32),
+                counters.reshape(*nodes.shape, fanout))
+
+    def sample_hashed(self, batch_nodes: np.ndarray, gpos: np.ndarray,
+                      key: np.uint64) -> List[np.ndarray]:
+        """Deterministic sharded sampling: the subtree below the target at
+        *global* batch position ``gpos[i]`` is a pure function of
+        ``(key, gpos[i])`` (``key = stream_key(seed, step)``), so shards
+        sampling disjoint slices of one global batch reproduce exactly the
+        levels a single host would have drawn for the whole batch."""
+        levels = [np.asarray(batch_nodes).astype(np.int32)]
+        cur = levels[0]
+        pids = np.asarray(gpos, np.uint64) + np.uint64(1)   # 0 is never a path
+        for lvl, f in enumerate(self.fanouts):
+            # per-level subkey: counters are only unique within a level, so
+            # re-keying each level keeps a deep node's draws independent of a
+            # shallow node's even when their counters coincide (which happens
+            # as soon as the global batch exceeds _PATH_STRIDE)
+            lkey = np.uint64(_mix64(key + np.uint64(lvl) + np.uint64(1)))
+            cur, pids = self._sample_level_hashed(cur, pids, f, lkey)
+            levels.append(cur)
+        return levels
 
     def minibatches(self, nodes: np.ndarray, batch_size: int, shuffle: bool = True):
         """Yield (levels, batch_node_ids); final short batch is wrapped (padded

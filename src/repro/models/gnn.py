@@ -140,8 +140,10 @@ def sage_forward_frontier_cached(params, fb: FrontierBatch, cfg: GNNConfig,
     cache = CachedDecodeBackend(staleness=ecfg.cache_staleness)
     ids = sharding.logical(fb.unique, "frontier")
     # frontier padding rows repeat unique[0] — mask them out of the cache so
-    # they don't burn LRU slots or skew the hit/miss accounting
-    valid = jnp.arange(ids.shape[0], dtype=jnp.int32) < fb.n_unique
+    # they don't burn LRU slots or skew the hit/miss accounting (sharded
+    # stacked frontiers carry an explicit mask: padding is per shard block,
+    # not a global suffix)
+    valid = fb.valid_mask()
     hu, new_state = cache.lookup(
         cache_state, ids,
         lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,

@@ -256,6 +256,46 @@ def batch_shardings(batch_tree, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(fn, batch_tree)
 
 
+def frontier_batch_shardings(batch, mesh: Mesh, axis: Optional[str] = None):
+    """Shardings for a streaming-engine batch dict ({"frontier":
+    FrontierBatch, "labels": ...}): the frontier's row-parallel leaves
+    (``unique`` ids and the ``valid`` mask) go on the data axis — shard s's
+    block of a ``ShardedSageBatchSource`` stack lands on device s — while
+    index maps, labels and counters stay replicated (they feed the
+    post-all_gather combine, which every device runs on the full batch)."""
+    from repro.graph.sampler import FrontierBatch
+    from repro.parallel.sharding import data_axis
+
+    axis = axis or data_axis(mesh)
+    k = mesh.shape[axis]
+    rep = NamedSharding(mesh, P())
+
+    def rows(leaf):
+        if leaf.shape and leaf.shape[0] % k == 0:
+            return NamedSharding(mesh, P(axis))
+        return rep
+
+    def fn(v):
+        if isinstance(v, FrontierBatch):
+            return FrontierBatch(
+                unique=rows(v.unique),
+                index_maps=tuple(rep for _ in v.index_maps),
+                n_unique=rep,
+                valid=None if v.valid is None else rows(v.valid))
+        return jax.tree.map(lambda _: rep, v)
+
+    return {key: fn(v) for key, v in batch.items()}
+
+
+def make_frontier_placement(mesh: Mesh, axis: Optional[str] = None):
+    """``device`` callable for ``PrefetchIterator``: the producer thread
+    places each batch straight into the sharded layout above, so per-shard
+    frontier rows never bounce through a single device."""
+    def place(batch):
+        return jax.device_put(batch, frontier_batch_shardings(batch, mesh, axis))
+    return place
+
+
 def kv_seq_mesh_axis(cfg: LMConfig, mesh: Mesh,
                      strategy: Strategy = DEFAULT_STRATEGY,
                      batch: int = 0):

@@ -162,6 +162,21 @@ def logical(x, *names: Optional[str]):
     return jax.lax.with_sharding_constraint(x, s)
 
 
+def data_axis(mesh: Mesh) -> str:
+    """The mesh axis carrying data-parallel rows: ``"data"`` when present,
+    else the first axis (1-axis ad-hoc meshes in tests/benchmarks)."""
+    return "data" if "data" in mesh.shape else mesh.axis_names[0]
+
+
+def data_axis_size(mesh: Optional[Mesh] = None) -> int:
+    """Shard count of the active (or given) mesh's data axis; 1 without a
+    mesh — the single-device no-op the sharded decode backend falls back to."""
+    mesh = mesh if mesh is not None else _STATE.mesh
+    if mesh is None:
+        return 1
+    return mesh.shape[data_axis(mesh)]
+
+
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     # jax.sharding.AxisType landed after 0.4.x; older versions default to
     # auto axes, which is exactly what we ask for on newer ones.

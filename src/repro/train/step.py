@@ -125,7 +125,8 @@ def init_gnn_train_state(key, cfg: GNNConfig, codes=None, aux=None) -> Dict[str,
 
 def make_gnn_train_step(cfg: GNNConfig,
                         opt: Optional[AdamWConfig] = None,
-                        interpret: bool = False) -> Callable:
+                        interpret: bool = False,
+                        mesh=None) -> Callable:
     """Node-classification train step over the unified ``GNNModel`` API.
 
     The batch is a dict from an engine batch source: either
@@ -142,14 +143,29 @@ def make_gnn_train_step(cfg: GNNConfig,
     bumped after the optimizer touches the decoder parameters (that bump is
     what invalidates cached embeddings once they exceed the staleness
     budget).
+
+    ``mesh`` makes the step trace under that sharding context: with
+    ``lookup_impl="sharded"`` (or ``"auto"``) the frontier decode of a
+    ``ShardedSageBatchSource`` batch runs shard-local on the mesh's data
+    axis — the whole N-shard switch is this argument plus the batch source's
+    ``n_shards``.
     """
+    from contextlib import nullcontext
+
     from repro.core.backend import CachedDecodeBackend
     from repro.graph.engine import GNNModel, batch_view
     from repro.models import gnn
-    model = GNNModel(cfg, interpret=interpret)
+    from repro.parallel.sharding import use_sharding
+    _ctx = (lambda: use_sharding(mesh)) if mesh is not None else nullcontext
+    with _ctx():
+        model = GNNModel(cfg, interpret=interpret)
     ocfg = opt or AdamWConfig(lr=1e-2, weight_decay=0.0)
 
     def train_step(state, batch):
+        with _ctx():
+            return _train_step(state, batch)
+
+    def _train_step(state, batch):
         view = batch_view(batch)
         cached = "cache" in state
 

@@ -150,7 +150,7 @@ def test_prefetch_state_resume(graph, cfg):
         expect = [np.asarray(pf.next_batch()["labels"]) for _ in range(3)]
     finally:
         pf.close()
-    assert snap == {"step": 3, "seed": 7}
+    assert snap == {"step": 3, "seed": 7, "shard": 0, "n_shards": 1}
 
     pf2 = PrefetchIterator(make(), depth=3)
     try:

@@ -1,0 +1,320 @@
+"""Sharded streaming engine (ISSUE 3): the (seed, shard, step) sampling
+contract, the stacked multi-shard frontier, the "sharded" decode backend,
+and their end-to-end agreement with the single-shard path.
+
+Single-device tests always run (the backend degrades to its base with no
+mesh / a 1-sized data axis); tests needing a real multi-device mesh carry
+the ``multidevice`` marker and skip — never error — below 2 devices (the
+``tools/ci.sh --multidevice`` leg forces 8 host devices and runs them).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core import backend as backend_mod
+from repro.core import embedding as emb_lib
+from repro.graph import FrontierBatch, NeighborSampler, powerlaw_graph
+from repro.graph.engine import (GNNModel, PrefetchIterator, SageBatchSource,
+                                ShardedSageBatchSource, default_frontier_cap)
+from repro.parallel.policy import make_frontier_placement
+from repro.parallel.sharding import use_sharding
+from repro.train import (LoopConfig, init_gnn_train_state, make_gnn_train_step,
+                         run_training)
+
+KEY = jax.random.PRNGKey(0)
+N = 1200
+N_SHARDS = 4
+BATCH = 64          # global batch; per-shard = BATCH // N_SHARDS
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_graph(0, N, avg_degree=8, n_classes=8, homophily=0.9)
+
+
+def _cfg(lookup_impl="sharded:gather", **emb_kw):
+    base = paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5)
+    return dataclasses.replace(base, embedding=dataclasses.replace(
+        base.embedding, c=16, m=8, d_c=64, d_m=64, lookup_impl=lookup_impl,
+        **emb_kw))
+
+
+@pytest.fixture(scope="module")
+def codes(graph):
+    adj, _ = graph
+    # numpy, not a device array: the train state is donated per step, so a
+    # shared device buffer would be deleted out from under the next init
+    return np.asarray(emb_lib.make_codes(KEY, _cfg().embedding_config(),
+                                         aux=adj))
+
+
+def _mesh(n):
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n]), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# sharded sampling contract (single device)
+# ---------------------------------------------------------------------------
+
+def test_shard_union_bit_identical_to_single(graph):
+    """The N per-shard batches concatenated == the 1-shard batch, per level,
+    for several steps — the (seed, shard, step) slicing contract."""
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    single = SageBatchSource(sampler, np.arange(N), labels, BATCH, seed=7)
+    shards = [SageBatchSource(sampler, np.arange(N), labels,
+                              BATCH // N_SHARDS, seed=7, shard=s,
+                              n_shards=N_SHARDS) for s in range(N_SHARDS)]
+    for _ in range(3):
+        g = single.next_batch()
+        parts = [s.next_batch() for s in shards]
+        for i, lvl in enumerate(g["frontier"].levels()):
+            cat = np.concatenate(
+                [np.asarray(p["frontier"].levels()[i]) for p in parts], axis=0)
+            np.testing.assert_array_equal(np.asarray(lvl), cat)
+        np.testing.assert_array_equal(
+            g["labels"], np.concatenate([p["labels"] for p in parts]))
+
+
+def test_shard_state_dict_roundtrip(graph):
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    src = SageBatchSource(sampler, np.arange(N), labels, 16, seed=3,
+                          shard=2, n_shards=N_SHARDS)
+    src.next_batch()
+    snap = src.state_dict()
+    assert snap == {"step": 1, "seed": 3, "shard": 2, "n_shards": N_SHARDS}
+    want = src.next_batch()
+    src.load_state_dict(snap)
+    got = src.next_batch()
+    np.testing.assert_array_equal(np.asarray(want["frontier"].unique),
+                                  np.asarray(got["frontier"].unique))
+    # a different shard layout must refuse the state
+    other = SageBatchSource(sampler, np.arange(N), labels, 16, seed=3,
+                            shard=1, n_shards=N_SHARDS)
+    with pytest.raises(AssertionError):
+        other.load_state_dict(snap)
+
+
+def test_sharded_source_stacked_layout_and_resume(graph):
+    """The stacked batch groups rows per shard block, offsets index maps
+    into the owning block, masks each block's padding, and resumes through
+    PrefetchIterator exactly."""
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    src = ShardedSageBatchSource(sampler, np.arange(N), labels,
+                                 BATCH // N_SHARDS, n_shards=N_SHARDS,
+                                 seed=7, pad_to=64)
+    cap = src.frontier_cap
+    batch = src.next_batch()
+    fb = batch["frontier"]
+    assert fb.unique.shape[0] == N_SHARDS * cap
+    assert fb.valid is not None and fb.valid.shape == fb.unique.shape
+    # each level-0 block points into its own shard's rows
+    tgt = np.asarray(fb.index_maps[0])
+    per = BATCH // N_SHARDS
+    for s in range(N_SHARDS):
+        blk = tgt[s * per:(s + 1) * per]
+        assert (blk >= s * cap).all() and (blk < (s + 1) * cap).all()
+    # stacked maps reconstruct the exact global levels of the 1-shard source
+    single = SageBatchSource(sampler, np.arange(N), labels, BATCH, seed=7)
+    g = single.next_batch()
+    for lvl, got in zip(g["frontier"].levels(), fb.levels()):
+        np.testing.assert_array_equal(np.asarray(lvl), np.asarray(got))
+
+    pf = PrefetchIterator(src, depth=2)
+    try:
+        pf.next_batch()
+        snap = pf.state_dict()
+        want = np.asarray(pf.next_batch()["labels"])
+        pf.load_state_dict(snap)
+        got = np.asarray(pf.next_batch()["labels"])
+    finally:
+        pf.close()
+    np.testing.assert_array_equal(want, got)
+
+
+def test_no_cross_level_draw_correlation_past_path_stride():
+    """Path counters repeat across levels once the global batch exceeds the
+    path stride (1024): target gpos 1024 shares its counter range with child
+    k=0 of gpos 0.  The per-level subkey must decorrelate those draws —
+    without it, the two streams are bit-identical whenever the node ids
+    coincide (regression for the sample_hashed keying scheme)."""
+    from repro.graph import CSRMatrix
+    # node 0's only neighbour is node 1; node 1 has many distinct neighbours
+    src = [0] + [1] * 40
+    dst = [1] + list(range(2, 42))
+    adj = CSRMatrix.from_edges(np.array(src), np.array(dst), n_nodes=42)
+    sampler = NeighborSampler(adj, (4, 4), max_deg=64, seed=0)
+    ids = np.zeros(1025, np.int32)
+    ids[1024] = 1                       # same node as gpos 0's forced child
+    from repro.graph.sampler import stream_key
+    levels = sampler.sample_hashed(ids, np.arange(1025, dtype=np.uint64),
+                                   stream_key(0, 0))
+    assert levels[1][0, 0] == 1         # child k=0 of gpos 0 is node 1
+    # child-of-child draws (level 2, key_1) vs target-1024 level-1 draws
+    # (key_0) share the counter range but must not share the stream
+    assert not np.array_equal(levels[2][0, 0, :], levels[1][1024, :])
+
+
+def test_frontier_cap_exact_padding_and_overflow():
+    levels = [np.arange(8), np.arange(8).repeat(3).reshape(8, 3)]
+    fb = FrontierBatch.from_levels(levels, cap=16)
+    assert fb.unique.shape == (16,) and int(fb.n_unique) == 8
+    with pytest.raises(ValueError, match="cap"):
+        FrontierBatch.from_levels(levels, cap=4)
+    # default cap: worst case bounded by the graph size, pad_to-aligned
+    assert default_frontier_cap(16, (5, 5), 64, n_nodes=N) == \
+        -(-min(16 * 31, N) // 64) * 64
+
+
+# ---------------------------------------------------------------------------
+# sharded backend (single device: degrades to base)
+# ---------------------------------------------------------------------------
+
+def test_sharded_backend_registry_and_fallback():
+    assert "sharded" in backend_mod.available_backends()
+    be = backend_mod.get_backend("sharded:gather")
+    assert be.base.name == "gather"
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        backend_mod.get_backend("nope")
+    with pytest.raises(ValueError, match="no ':"):
+        backend_mod.get_backend("gather:onehot")
+    with pytest.raises(ValueError, match="wrap itself"):
+        backend_mod.get_backend("sharded:sharded")
+
+    # no mesh -> bitwise the base backend
+    key = jax.random.PRNGKey(1)
+    codes = jax.random.randint(key, (32, 8), 0, 16)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 64))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (64,))
+    ref = backend_mod.get_backend("gather").decode(codes, cb, w0)
+    np.testing.assert_array_equal(np.asarray(be.decode(codes, cb, w0)),
+                                  np.asarray(ref))
+
+
+def test_sharded_selectable_through_model_and_serving(graph, codes):
+    """lookup_impl="sharded" resolves everywhere the registry is routed —
+    the GNN frontier path and the serving engine — and on one device the
+    hidden states are bitwise the gather path's."""
+    adj, labels = graph
+    cfg_sh = _cfg("sharded:gather")
+    cfg_ref = _cfg("gather")
+    params = GNNModel(cfg_ref).init(KEY, codes=codes)
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    fb = SageBatchSource(sampler, np.arange(N), labels, 32,
+                         seed=1).next_batch()["frontier"]
+    h_ref = GNNModel(cfg_ref).apply(params, jax.device_put(fb))
+    h_sh = GNNModel(cfg_sh).apply(params, jax.device_put(fb))
+    np.testing.assert_array_equal(np.asarray(h_ref), np.asarray(h_sh))
+
+    from repro.configs import get_config, reduced
+    from repro.models import init_lm
+    from repro.serving import DecodeEngine
+    lm_cfg = reduced(get_config("qwen1.5-0.5b"))
+    lm_params = init_lm(jax.random.PRNGKey(0), lm_cfg)
+    eng = DecodeEngine(lm_cfg, lm_params, s_max=32,
+                       decode_backend="sharded:gather")
+    assert eng.decode_backend == "sharded:gather"
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        DecodeEngine(lm_cfg, lm_params, s_max=32, decode_backend="bogus")
+
+
+# ---------------------------------------------------------------------------
+# multi-device: backend parity, end-to-end bit-identity, sharded cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice(n=4)
+def test_sharded_decode_matches_gather_oracle():
+    """Forward is bitwise the gather oracle (rows accumulate identically on
+    whichever shard holds them); grads match within f32 tolerance (the psum
+    reduces partial codebook grads in a different order)."""
+    mesh = _mesh(4)
+    key = jax.random.PRNGKey(0)
+    B, m, c, d_c = 64, 8, 16, 128
+    codes = jax.random.randint(key, (B, m), 0, c)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (m, c, d_c))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (d_c,))
+    oracle = backend_mod.get_backend("gather")
+    sb = backend_mod.get_backend("sharded:gather")
+
+    for scale in (w0, None):
+        ref = oracle.decode(codes, cb, scale)
+        with use_sharding(mesh):
+            out = jax.jit(lambda c, b, s: sb.decode(c, b, s))(codes, cb, scale)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def loss(fn):
+        return lambda cb_, w0_: (fn(codes, cb_, w0_) ** 2).sum()
+    with use_sharding(mesh):
+        assert backend_mod.resolve_auto() == "sharded"
+        g_sh = jax.jit(jax.grad(loss(sb.decode), argnums=(0, 1)))(cb, w0)
+    g_ref = jax.grad(loss(oracle.decode), argnums=(0, 1))(cb, w0)
+    for a, b in zip(g_sh, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.multidevice(n=4)
+def test_sharded_decode_pads_unaligned_batch():
+    mesh = _mesh(4)
+    key = jax.random.PRNGKey(3)
+    codes = jax.random.randint(key, (30, 8), 0, 16)   # 30 % 4 != 0
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 64))
+    ref = backend_mod.get_backend("gather").decode(codes, cb, None)
+    with use_sharding(mesh):
+        out = backend_mod.get_backend("sharded:gather").decode(codes, cb, None)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def _run_stream(graph, codes, cfg, n_shards, mesh, steps=3, seed=0):
+    adj, labels = graph
+    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=32, seed=0)
+    src = ShardedSageBatchSource(sampler, np.arange(N), labels,
+                                 BATCH // n_shards, n_shards=n_shards,
+                                 seed=seed, pad_to=64)
+    place = make_frontier_placement(mesh) if mesh is not None else None
+    state = init_gnn_train_state(KEY, cfg, codes=codes)
+    it = PrefetchIterator(src, depth=2, device=place)
+    try:
+        res = run_training(make_gnn_train_step(cfg, mesh=mesh), state, it,
+                           LoopConfig(total_steps=steps))
+    finally:
+        it.close()
+    return res.losses
+
+
+@pytest.mark.multidevice(n=4)
+def test_4shard_run_loss_bit_identical_to_1shard(graph, codes):
+    """Acceptance (ISSUE 3): with a 4-way data mesh, the 4-shard streaming
+    GNN run's forward loss is bit-identical to the 1-shard run on step 0 —
+    same global batch (sampling contract), same decoded rows (sharded
+    backend over the gather base), same combine (full-batch, post-gather).
+    """
+    cfg = _cfg("sharded:gather")
+    l1 = _run_stream(graph, codes, cfg, 1, None)
+    l4 = _run_stream(graph, codes, cfg, N_SHARDS, _mesh(N_SHARDS))
+    assert l1[0] == l4[0], f"step-0 loss diverged: {l1[0]} vs {l4[0]}"
+    # later steps may only drift by f32 accumulation (grad psum order)
+    assert max(abs(a - b) for a, b in zip(l1, l4)) < 1e-3
+
+
+@pytest.mark.multidevice(n=4)
+def test_cached_decode_staleness0_bit_exact_under_sharding(graph, codes):
+    """Satellite (ISSUE 3): CachedDecodeBackend at staleness 0 over a
+    shard-partitioned frontier reproduces the uncached sharded run exactly
+    (the stacked batch's per-block `valid` mask keeps padding rows out of
+    the cache, and every access re-decodes at staleness 0)."""
+    mesh = _mesh(N_SHARDS)
+    l_plain = _run_stream(graph, codes, _cfg("sharded:gather"),
+                          N_SHARDS, mesh, steps=6, seed=7)
+    l_cached = _run_stream(graph, codes,
+                           _cfg("sharded:gather", cache_capacity=256,
+                                cache_staleness=0),
+                           N_SHARDS, mesh, steps=6, seed=7)
+    assert l_plain == l_cached

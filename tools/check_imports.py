@@ -5,8 +5,10 @@ silently break collection of unrelated test modules again.
 
 Two phases:
 
-  1. import every module under ``src/repro`` — these must ALWAYS import
-     (optional deps there have to be lazy/gated);
+  1. import every module under ``src/repro``, plus every ``benchmarks/``
+     and ``tools/`` module — all must ALWAYS import (optional deps have to
+     be lazy/gated; benchmark/tool entry points may only *run* work behind
+     ``main()``/``run()`` guards, never at import time);
   2. ``pytest --collect-only`` over ``tests/`` — test modules needing an
      optional dependency must guard it with ``pytest.importorskip`` (skips
      are fine, collection *errors* are not).
@@ -39,17 +41,32 @@ def iter_modules() -> list:
     return mods
 
 
+def iter_script_modules() -> list:
+    """``benchmarks.*`` and ``tools.*`` modules (namespace packages rooted
+    at the repo) — the CI runs ``python -m benchmarks.run``, so a benchmark
+    that stops importing is a broken CI leg, not someone else's problem."""
+    mods = []
+    for pkg in ("benchmarks", "tools"):
+        for py in sorted((ROOT / pkg).glob("*.py")):
+            if py.stem != "__init__":
+                mods.append(f"{pkg}.{py.stem}")
+    return mods
+
+
 def check_src_imports() -> int:
     sys.path.insert(0, str(SRC))
+    sys.path.insert(0, str(ROOT))     # benchmarks/ + tools/ namespace pkgs
     failures = 0
-    for mod in iter_modules():
+    src_mods, script_mods = iter_modules(), iter_script_modules()
+    for mod in src_mods + script_mods:
         try:
             importlib.import_module(mod)
         except Exception:
             failures += 1
             print(f"FAIL import {mod}")
             traceback.print_exc(limit=3)
-    print(f"[check_imports] src: {len(iter_modules())} modules, "
+    print(f"[check_imports] src: {len(src_mods)} modules + "
+          f"{len(script_mods)} benchmark/tool modules, "
           f"{failures} import failure(s)")
     return failures
 

@@ -1,10 +1,21 @@
 #!/usr/bin/env bash
-# Single CI entry point (ISSUE 2 satellite).
+# Single CI entry point (ISSUE 2 satellite; multidevice leg from ISSUE 3).
 #
-#   tools/ci.sh           import gate + tier-1 pytest
-#   tools/ci.sh --bench   ... plus the benchmark suite in --smoke mode
-#                         (2 steps per benchmark: exercises every module's
-#                         code path so benchmarks can't silently rot)
+#   tools/ci.sh                import gate + tier-1 pytest
+#   tools/ci.sh --bench        ... plus the benchmark suite in --smoke mode
+#                              (2 steps per benchmark: exercises every
+#                              module's code path so benchmarks can't
+#                              silently rot)
+#   tools/ci.sh --bench-only   import gate + benchmark smoke, WITHOUT the
+#                              tier-1 pytest — the CI matrix runs tier-1 in
+#                              its own leg, so the bench leg shouldn't pay
+#                              for the suite twice
+#   tools/ci.sh --multidevice  import gate + the `multidevice`-marked tests
+#                              under XLA_FLAGS=--xla_force_host_platform_
+#                              device_count=8, so sharded code paths see 8
+#                              devices on a CPU-only container.  Runs ONLY
+#                              the marked tests: the tier-1 suite must keep
+#                              its single-device view (tests/conftest.py).
 #
 # Mirrors ROADMAP "Tier-1 verify": import/collection health is a gate that
 # runs BEFORE the suite, so a broken optional dep fails loudly here instead
@@ -14,13 +25,32 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+RUN_BENCH=0
+RUN_MULTI=0
+RUN_SUITE=1
+for arg in "$@"; do
+    case "$arg" in
+        --bench)       RUN_BENCH=1 ;;
+        --bench-only)  RUN_BENCH=1; RUN_SUITE=0 ;;
+        --multidevice) RUN_MULTI=1 ;;
+        *) echo "usage: tools/ci.sh [--bench|--bench-only] [--multidevice]" >&2
+           exit 2 ;;
+    esac
+done
+
 echo "== [1/2] import-health gate =="
 python tools/check_imports.py
 
-echo "== [2/2] tier-1 pytest =="
-python -m pytest -x -q
+if [[ "$RUN_MULTI" == 1 ]]; then
+    echo "== [2/2] multidevice pytest (8 forced host devices) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python -m pytest -q -m multidevice
+elif [[ "$RUN_SUITE" == 1 ]]; then
+    echo "== [2/2] tier-1 pytest =="
+    python -m pytest -x -q
+fi
 
-if [[ "${1:-}" == "--bench" ]]; then
+if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== [extra] benchmark smoke =="
     python -m benchmarks.run --smoke
 fi
