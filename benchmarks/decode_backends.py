@@ -1,9 +1,12 @@
-"""Decode-backend comparison on the frontier workload (ISSUE 2).
+"""Decode-backend comparison on the frontier workload (ISSUE 2; pipeline
+construction through ``GraphRuntime`` since ISSUE 4).
 
 Times the unique-frontier embedding decode — the hot op of compressed-
 embedding GNN training — through each registered ``DecodeBackend`` (gather /
-onehot / pallas) and through the hot-node ``CachedDecodeBackend``, on the
-sampler_pipeline workload: B=256 targets, fanout (10, 10), power-law graph.
+onehot / pallas), through the hot-node ``CachedDecodeBackend`` during
+training, and through the miss-only serving path
+(``GraphInferenceEngine``), on the sampler_pipeline workload: B=256
+targets, fanout (10, 10), power-law graph.
 
 Emits the usual CSV rows AND writes ``BENCH_decode.json`` next to the repo
 root so the decode-path perf trajectory has a machine-readable datapoint per
@@ -11,64 +14,64 @@ commit.
 
 Reading the numbers on a CPU container: ``pallas`` runs in interpret mode
 (a semantics check, orders of magnitude off kernel speed — compare backends
-on a TPU runtime); the cache's win column is ``rows_decoded`` (misses), the
-decode work a miss-only implementation performs, not wall-clock (the
-select-based cache still decodes every row on CPU).
+on a TPU runtime).  The cache's win column is ``rows_decoded``: during
+training the select-based cache still decodes every row (misses are the
+*claimable* win), but the ``cached_missonly`` serving row pays the decoder
+for **misses only** — the frontier is partitioned host-side into a padded
+miss-prefix (``CachedDecodeBackend.plan_missonly``), so ``rows_decoded``
+there is work actually skipped, not an accounting fiction.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import json
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, steps, time_fn
 from repro.configs.paper_gnn import paper_gnn_config
 from repro.core import backend as backend_mod
 from repro.core import embedding as emb_lib
-from repro.graph import NeighborSampler, powerlaw_graph
-from repro.graph.engine import SageBatchSource
-from repro.train.step import init_gnn_train_state, make_gnn_train_step
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.optim import AdamWConfig
 
 N_NODES = 8000
 N_CLASSES = 8
 BATCH = 256
 FANOUT = 10
-KEY = jax.random.PRNGKey(0)
 OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_decode.json"
 
 
-def _setup():
-    adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
-                                 n_classes=N_CLASSES, homophily=0.9)
-    cfg = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
-                           kind="hash_full", fanout=FANOUT)
-    # lane-aligned d_c so the pallas backend never pads
-    cfg = dataclasses.replace(
-        cfg, embedding=dataclasses.replace(cfg.embedding, c=16, m=8,
-                                           d_c=128, d_m=64))
-    codes = emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj)
-    return adj, labels, cfg, codes
+def _spec(**updates) -> RuntimeSpec:
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=N_CLASSES, avg_degree=10, homophily=0.9),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                               kind="hash_full", fanout=FANOUT),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=BATCH, data_seed=1, prefetch_depth=0,
+        # lane-aligned d_c so the pallas backend never pads
+    ).with_updates(c=16, m=8, d_c=128, d_m=64)
+    return spec.with_updates(**updates) if updates else spec
 
 
 def run():
-    adj, labels, cfg, codes = _setup()
-    ecfg = cfg.embedding_config()
-    state = init_gnn_train_state(KEY, cfg, codes=codes)
-    params = state["params"]
+    import time as _time
 
-    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
-    src = SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH, seed=1)
-    fb = jax.device_put(src.next_batch()["frontier"])
+    spec = _spec()
+    graph = spec.graph.build()
+    ecfg = spec.model.embedding_config()
+    rt = GraphRuntime.from_spec(spec, graph=graph)
+    params = rt.state["params"]
+    fb = jax.device_put(rt.data_iter.next_batch()["frontier"])
     rows = int(fb.unique.shape[0])
 
     report = {
         "workload": {"n_nodes": N_NODES, "batch": BATCH,
-                     "fanouts": list(cfg.fanouts), "frontier_rows": rows,
+                     "fanouts": list(spec.model.fanouts),
+                     "frontier_rows": rows,
                      "c": ecfg.c, "m": ecfg.m, "d_c": ecfg.d_c},
         "device": jax.default_backend(),
         "backends": {},
@@ -93,27 +96,25 @@ def run():
         emit(f"decode_backends/{name}/fwd_bwd", t_bwd, f"rows={rows} {note}")
         report["backends"][name] = {
             "fwd_us": t_fwd, "fwd_bwd_us": t_bwd, "rows": rows, "mode": note}
+    rt.close()
 
     # ---- cached decode: training throughput + hit accounting ------------
     n_steps = steps(20)
     variants = {
-        "uncached": cfg,
-        "cached_s2": dataclasses.replace(cfg, embedding=dataclasses.replace(
-            cfg.embedding, cache_capacity=4096, cache_staleness=2)),
+        "uncached": spec,
+        "cached_s2": _spec(cache_capacity=4096, cache_staleness=2),
     }
-    import time as _time
-    for label, c in variants.items():
-        vsrc = SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH,
-                               seed=1)
-        vstate = init_gnn_train_state(KEY, c, codes=codes)
-        step = jax.jit(make_gnn_train_step(c))
+    for label, vspec in variants.items():
+        vrt = GraphRuntime.from_spec(vspec, graph=graph)
+        vstate, step = vrt.state, vrt.jitted_step
         metrics = {}
         t0 = None
         for i in range(n_steps):
-            vstate, metrics = step(vstate, jax.device_put(vsrc.next_batch()))
+            vstate, metrics = step(vstate, vrt.data_iter.next_batch())
             jax.block_until_ready(metrics["loss"])
             if i == 0:        # first step pays compile
                 t0 = _time.perf_counter()
+        vrt.close()
         per_step = (_time.perf_counter() - t0) / max(n_steps - 1, 1) * 1e6
         entry = {"step_us": per_step, "steps": n_steps,
                  "final_loss": float(metrics["loss"])}
@@ -129,6 +130,33 @@ def run():
                         f" rows_decoded={misses / n_steps:.0f}/{rows}")
         emit(f"decode_backends/{label}/step", per_step, derived)
         report["backends"][label] = entry
+
+    # ---- miss-only cached decode (serving path): only misses pay --------
+    # The serving engine partitions each frontier host-side into a padded
+    # miss-prefix, so rows_decoded here is decoder work actually performed.
+    srt = GraphRuntime.from_spec(spec, graph=graph)
+    engine = srt.serve(serve_batch=BATCH)
+    n_req = steps(20)
+    rng = np.random.default_rng(3)
+    t0 = None
+    for i in range(n_req):
+        res = engine.serve(rng.integers(0, N_NODES, BATCH))
+        if i == 0:            # first request pays compile
+            t0 = _time.perf_counter()
+    per_req = (_time.perf_counter() - t0) / max(n_req - 1, 1) * 1e6
+    stats = engine.stats()
+    srt.close()
+    entry = {"request_us": per_req, "requests": n_req,
+             "rows_decoded_per_request": stats["rows_decoded"] / n_req,
+             "rows_per_request": stats["rows_total"] / n_req,
+             "hit_rate": stats.get("hit_rate", 0.0),
+             "last_request_rows_decoded": res.rows_decoded}
+    emit("decode_backends/cached_missonly/request", per_req,
+         f"rows_decoded={entry['rows_decoded_per_request']:.0f}"
+         f"/{entry['rows_per_request']:.0f}"
+         f" hit_rate={entry['hit_rate']:.2f}"
+         f" steady_state_rows={res.rows_decoded}")
+    report["backends"]["cached_missonly"] = entry
 
     # smoke runs exercise the code path but must not clobber the committed
     # real-measurement datapoint with 1-2-iteration throwaway numbers

@@ -6,6 +6,7 @@
 #   sampler_pipeline     ISSUE 1   — dedup-decode rows + prefetch steps/sec
 #   decode_backends      ISSUE 2   — gather/onehot/pallas/cached frontier decode
 #   sharded_pipeline     ISSUE 3   — 1- vs 4-shard streaming step (8 forced devices)
+#   serving_gnn          ISSUE 4   — GraphRuntime serve(): miss-only cached decode
 #   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
@@ -29,6 +30,7 @@ MODULES = [
     "sampler_pipeline",
     "decode_backends",
     "sharded_pipeline",
+    "serving_gnn",
     "kernels_micro",
     "roofline_report",
     "fig1_reconstruction",

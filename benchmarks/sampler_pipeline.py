@@ -1,4 +1,7 @@
-"""Engine micro-benchmark — dedup-decode + async prefetch (ISSUE 1).
+"""Engine micro-benchmark — dedup-decode + async prefetch (ISSUE 1),
+driven through ``GraphRuntime`` (ISSUE 4): every pipeline variant is a
+``RuntimeSpec`` field change (``dedup``, ``prefetch_depth``), not bespoke
+wiring.
 
 Measures, on the quickstart-scale synthetic graph, the three claims the
 ``repro.graph.engine`` refactor makes:
@@ -17,71 +20,58 @@ from __future__ import annotations
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, steps
 from repro.configs.paper_gnn import paper_gnn_config
-from repro.core import embedding as emb_lib
-from repro.graph import NeighborSampler, powerlaw_graph
-from repro.graph.engine import PrefetchIterator, SageBatchSource
-from repro.train.step import init_gnn_train_state, make_gnn_train_step
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.optim import AdamWConfig
 
 N_NODES = 8000
 N_CLASSES = 8
 BATCH = 256
 STEPS = 40
-KEY = jax.random.PRNGKey(0)
 
 
-def _setup():
-    adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
-                                 n_classes=N_CLASSES, homophily=0.9)
-    cfg = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
-                           kind="hash_full", fanout=10)
-    cfg = dataclasses.replace(
-        cfg, embedding=dataclasses.replace(cfg.embedding, c=16, m=8, d_c=64, d_m=64))
-    codes = emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj)
-    state = init_gnn_train_state(KEY, cfg, codes=codes)
-    return adj, labels, cfg, state
+def _spec(**updates) -> RuntimeSpec:
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=N_CLASSES, avg_degree=10, homophily=0.9),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                               kind="hash_full", fanout=10),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=BATCH, data_seed=1, prefetch_depth=0,
+    ).with_updates(c=16, m=8, d_c=64, d_m=64)
+    return spec.with_updates(**updates) if updates else spec
 
 
-def _source(adj, labels, cfg, dedup: bool) -> SageBatchSource:
-    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
-    return SageBatchSource(sampler, np.arange(N_NODES), labels, BATCH,
-                           seed=1, dedup=dedup)
-
-
-def _run(step_fn, state, data_iter, n_steps: int):
-    state = jax.tree.map(jnp.copy, state)   # each run trains from the same init
-    jitted = jax.jit(step_fn)
-    warm = min(4, n_steps - 1)              # skip compile steps before timing
-    losses, t0 = [], None
-    for i in range(n_steps):
-        batch = jax.device_put(data_iter.next_batch()) \
-            if isinstance(data_iter, SageBatchSource) else data_iter.next_batch()
-        state, metrics = jitted(state, batch)
-        losses.append(float(metrics["loss"]))
-        if i == warm:
-            t0 = time.perf_counter()
-    dt = time.perf_counter() - t0
-    return np.asarray(losses), dt / max(n_steps - warm - 1, 1)
+def _train(spec: RuntimeSpec, graph, n_steps: int):
+    """Per-step times + losses from the runtime's own loop (the loop's
+    ``float(loss)`` device sync makes the timings honest)."""
+    rt = GraphRuntime.from_spec(spec, graph=graph)
+    try:
+        res = rt.train(n_steps)
+    finally:
+        rt.close()
+    warm = min(4, n_steps - 1)              # skip compile steps
+    per_step = float(np.mean(res.step_times[warm:])) if n_steps > warm else 0.0
+    return np.asarray(res.losses), per_step
 
 
 def run():
-    adj, labels, cfg, state = _setup()
-    step_fn = make_gnn_train_step(cfg)
-    f1, f2 = cfg.fanouts
-    naive_rows = BATCH * (1 + f1 + f1 * f2)
+    graph = _spec().graph.build()           # share one build across variants
 
     # -- 1. decoded rows per batch: naive vs unique frontier ------------
-    src = _source(adj, labels, cfg, dedup=True)
+    spec = _spec()
+    f1, f2 = spec.model.fanouts
+    naive_rows = BATCH * (1 + f1 + f1 * f2)
+    probe = GraphRuntime.from_spec(spec, graph=graph)
     uniq, padded = [], []
     for _ in range(steps(20)):
-        fb = src.next_batch()["frontier"]
+        fb = probe.data_iter.next_batch()["frontier"]
         uniq.append(int(fb.n_unique))
         padded.append(fb.unique.shape[0])
+    probe.close()
     emit("sampler_pipeline/decode_rows", float(np.mean(padded)),
          f"naive={naive_rows} unique={np.mean(uniq):.0f} "
          f"dup_factor={naive_rows / np.mean(padded):.2f}x")
@@ -93,31 +83,29 @@ def run():
     # the overlap win shrinks to ~breakeven; on an accelerator the host is
     # idle during the step and the full sampling time is recovered.
     t0 = time.perf_counter()
-    probe = _source(adj, labels, cfg, dedup=True)
+    probe = GraphRuntime.from_spec(spec, graph=graph)
     for _ in range(steps(20)):
-        probe.next_batch()
-    emit("sampler_pipeline/host_sample", (time.perf_counter() - t0) / steps(20) * 1e6,
+        probe.data_iter.next_batch()
+    probe.close()
+    emit("sampler_pipeline/host_sample",
+         (time.perf_counter() - t0) / steps(20) * 1e6,
          "host-side numpy sampling per batch")
 
-    sync_src = _source(adj, labels, cfg, dedup=True)
-    _, t_sync = _run(step_fn, state, sync_src, steps(STEPS))
-    pf = PrefetchIterator(_source(adj, labels, cfg, dedup=True), depth=2)
-    try:
-        _, t_pf = _run(step_fn, state, pf, steps(STEPS))
-    finally:
-        pf.close()
+    _, t_sync = _train(_spec(prefetch_depth=0), graph, steps(STEPS))
+    _, t_pf = _train(_spec(prefetch_depth=2), graph, steps(STEPS))
     emit("sampler_pipeline/step_sync", t_sync * 1e6,
-         f"steps_per_sec={1.0 / t_sync:.1f}")
+         f"steps_per_sec={1.0 / max(t_sync, 1e-9):.1f}")
     emit("sampler_pipeline/step_prefetch", t_pf * 1e6,
-         f"steps_per_sec={1.0 / t_pf:.1f} speedup={t_sync / t_pf:.2f}x")
+         f"steps_per_sec={1.0 / max(t_pf, 1e-9):.1f} "
+         f"speedup={t_sync / max(t_pf, 1e-9):.2f}x")
 
     # -- 3. loss-trajectory parity: engine vs pre-refactor naive path ---
     # The forward pass is bit-identical (tests/test_engine.py); under
     # training the two paths reduce gradients in different orders (dedup
     # scatter-adds into unique rows), so trajectories track within float32
     # accumulation noise rather than exactly.
-    losses_dedup, _ = _run(step_fn, state, _source(adj, labels, cfg, True), steps(30))
-    losses_naive, _ = _run(step_fn, state, _source(adj, labels, cfg, False), steps(30))
+    losses_dedup, _ = _train(_spec(dedup=True), graph, steps(30))
+    losses_naive, _ = _train(_spec(dedup=False), graph, steps(30))
     gaps = np.abs(losses_dedup - losses_naive)
     emit("sampler_pipeline/loss_parity", float(gaps.max()) * 1e6,
          f"max_abs_loss_gap={gaps.max():.3e} early_gap={gaps[:10].max():.3e} "

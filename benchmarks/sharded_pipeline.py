@@ -1,9 +1,12 @@
-"""Sharded streaming pipeline benchmark (ISSUE 3).
+"""Sharded streaming pipeline benchmark (ISSUE 3, runtime-fronted in
+ISSUE 4).
 
-Times the end-to-end streaming GNN train step — stacked per-shard frontiers
-(``ShardedSageBatchSource``) decoded through the ``"sharded"`` backend — at
-1 and 4 shards, and checks the step-0 forward-loss bit-identity contract the
-tests assert.  Emits the usual CSV rows AND writes ``BENCH_shard.json``.
+Times the end-to-end streaming GNN train step at 1 and 4 shards and checks
+the step-0 forward-loss bit-identity contract the tests assert.  The whole
+pipeline — batch source selection, mesh, frontier placement, prefetch —
+comes from ``GraphRuntime.from_spec``; the 1-shard vs 4-shard legs differ
+by exactly one ``RuntimeSpec`` field (``n_shards``).  Emits the usual CSV
+rows AND writes ``BENCH_shard.json``.
 
 The measurement runs in a SUBPROCESS with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the 4-shard leg
@@ -33,59 +36,56 @@ ROOT = Path(__file__).resolve().parents[1]
 OUT_PATH = ROOT / "BENCH_shard.json"
 
 _WORKER = """
-import dataclasses, json, sys, time
+import json, sys, time
 import jax, numpy as np
-from jax.sharding import Mesh
 from repro.configs.paper_gnn import paper_gnn_config
-from repro.core import embedding as emb_lib
-from repro.graph import NeighborSampler, powerlaw_graph
-from repro.graph.engine import PrefetchIterator, ShardedSageBatchSource
-from repro.parallel.policy import make_frontier_placement
-from repro.train import init_gnn_train_state, make_gnn_train_step
+from repro.graph.engine import default_frontier_cap
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.optim import AdamWConfig
 
 N_NODES, N_CLASSES, BATCH, FANOUT = 8000, 8, 256, 10
-KEY = jax.random.PRNGKey(0)
 n_steps = int(sys.argv[1])
 
-adj, labels = powerlaw_graph(0, N_NODES, avg_degree=10,
-                             n_classes=N_CLASSES, homophily=0.9)
-base = paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
-                        fanout=FANOUT)
-cfg = dataclasses.replace(base, embedding=dataclasses.replace(
-    base.embedding, c=16, m=8, d_c=128, d_m=64, lookup_impl="sharded:gather"))
-codes = np.asarray(emb_lib.make_codes(KEY, cfg.embedding_config(), aux=adj))
-sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
+spec = RuntimeSpec(
+    graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                      n_classes=N_CLASSES, avg_degree=10, homophily=0.9),
+    model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                           fanout=FANOUT),
+    optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+    batch_size=BATCH, data_seed=1, prefetch_depth=2,
+).with_updates(c=16, m=8, d_c=128, d_m=64, lookup_impl="sharded:gather")
+graph = spec.graph.build()
 
 def run(n_shards):
-    mesh = (Mesh(np.asarray(jax.devices()[:n_shards]), ("data",))
-            if n_shards > 1 else None)
-    src = ShardedSageBatchSource(sampler, np.arange(N_NODES), labels,
-                                 BATCH // n_shards, n_shards=n_shards, seed=1)
-    place = make_frontier_placement(mesh) if mesh is not None else None
-    state = init_gnn_train_state(KEY, cfg, codes=codes)
-    step = jax.jit(make_gnn_train_step(cfg, mesh=mesh), donate_argnums=(0,))
-    it = PrefetchIterator(src, depth=2, device=place)
+    # fix the per-shard frontier cap at its worst case so every step keeps
+    # one jit shape (a varying round-up cap would recompile mid-measurement)
+    cap = default_frontier_cap(BATCH // n_shards, spec.model.fanouts,
+                               spec.pad_to, N_NODES)
+    rt = GraphRuntime.from_spec(
+        spec.with_updates(n_shards=n_shards, frontier_cap=cap), graph=graph)
+    state, step = rt.state, rt.jitted_step
     losses, uniq, t0 = [], [], None
     try:
         for i in range(n_steps):
-            batch = it.next_batch()
+            batch = rt.data_iter.next_batch()
             uniq.append(int(np.asarray(batch["frontier"].n_unique)))
             state, metrics = step(state, batch)
             losses.append(float(metrics["loss"]))   # blocks
             if i == 0:
                 t0 = time.perf_counter()            # first step pays compile
     finally:
-        it.close()
+        rt.close()
     per_step = (time.perf_counter() - t0) / max(n_steps - 1, 1) * 1e6
+    rows_total = batch["frontier"].unique.shape[0]
     return {"n_shards": n_shards, "step_us": per_step, "losses": losses,
-            "frontier_rows_total": n_shards * src.frontier_cap,
-            "frontier_rows_per_device": src.frontier_cap,
+            "frontier_rows_total": rows_total,
+            "frontier_rows_per_device": rows_total // n_shards,
             "unique_rows_per_device": sum(uniq) / len(uniq) / n_shards}
 
 out = {"device_count": jax.device_count(),
        "workload": {"n_nodes": N_NODES, "batch": BATCH,
                     "fanouts": [FANOUT, FANOUT], "steps": n_steps,
-                    "lookup_impl": cfg.embedding.lookup_impl},
+                    "lookup_impl": spec.model.embedding.lookup_impl},
        "runs": {f"{r['n_shards']}shard": r for r in (run(1), run(4))}}
 out["step0_loss_bit_identical"] = (
     out["runs"]["1shard"]["losses"][0] == out["runs"]["4shard"]["losses"][0])

@@ -1,76 +1,80 @@
-"""Quickstart: compress a node-embedding table with the paper's pipeline.
+"""Quickstart: the paper's pipeline end to end through ONE declarative spec.
 
-1. Build a graph (adjacency = the auxiliary information).
-2. Encode every node into a compositional code (Algorithm 1 — training-free).
-3. Train the shared decoder end-to-end against a downstream objective.
-4. Compare the memory footprint with the uncompressed table.
+1. Describe everything — graph, GNN + compressed embedding, optimizer,
+   pipeline knobs — in a ``RuntimeSpec`` (plain values, JSON round-trip).
+2. ``GraphRuntime.from_spec`` builds the whole thing: the graph, Algorithm-1
+   codes (training-free), the decoder + GNN state, the dedup-decode sampler
+   pipeline.
+3. Train the decoder jointly with the task, evaluate the held-out splits.
+4. Serve batched requests through the ``GraphInferenceEngine`` (miss-only
+   hot-node cached decode — only cache misses pay the decoder).
+5. Compare the memory footprint with the uncompressed table.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import codes as codes_lib
-from repro.core import lsh
-from repro.core.embedding import EmbeddingConfig, embed_lookup, init_embedding
+from repro.configs.paper_gnn import paper_gnn_config
 from repro.core.memory import memory_breakdown, MiB
-from repro.graph.generate import powerlaw_graph
-from repro.nn.module import param_bytes, trainable_mask
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.nn.module import param_bytes
+from repro.optim import AdamWConfig
 
 N_NODES = 20_000
-key = jax.random.PRNGKey(0)
-
-# -- 1. graph ----------------------------------------------------------------
-adj, labels = powerlaw_graph(0, N_NODES, avg_degree=8, n_classes=16)
-print(f"graph: {N_NODES} nodes, {adj.nnz} edges")
-
-# -- 2. encode (Algorithm 1: random projection, median threshold) -------------
-cfg = EmbeddingConfig(kind="hash_full", n_entities=N_NODES, d_e=64,
-                      c=256, m=16, d_c=512, d_m=512, compute_dtype="float32")
-codes = lsh.encode_lsh(key, adj, cfg.c, cfg.m)
-print(f"codes: {codes.shape} uint32 "
-      f"({codes_lib.n_bits(cfg.c, cfg.m)} bits/node, "
-      f"collisions={codes_lib.count_collisions(codes)})")
-
-# -- 3. decoder trains with the downstream task -------------------------------
-params = init_embedding(key, cfg, codes=codes)
-w_cls = jax.random.normal(key, (64, 16)) * 0.05
-opt_state = adamw_init(params)
-labels_j = jnp.asarray(labels)
 
 
-@jax.jit
-def train_step(params, opt_state, ids):
-    def loss_fn(p):
-        emb = embed_lookup(p, ids, cfg)
-        logits = emb @ w_cls
-        logz = jax.nn.logsumexp(logits, -1)
-        gold = jnp.take_along_axis(logits, labels_j[ids][:, None], 1)[:, 0]
-        return jnp.mean(logz - gold)
-    loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(params)
-    params, opt_state = adamw_update(params, grads, opt_state,
-                                     AdamWConfig(lr=1e-3))
-    return params, opt_state, loss
+def main():
+    # -- 1. one spec = the whole pipeline ---------------------------------
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=16, avg_degree=8),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=16,
+                               kind="hash_full", fanout=10),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=256,
+        total_steps=100,
+        log_every=25,
+    ).with_updates(d_c=128, d_m=128)     # reduced decoder so CPU stays snappy
+    print(f"spec round-trips to {len(spec.to_json())} bytes of JSON")
+
+    # -- 2. build: graph + Algorithm-1 codes + state ----------------------
+    rt = GraphRuntime.from_spec(spec)
+    cfg = spec.model.embedding
+    print(f"graph: {N_NODES} nodes, {rt.adj.nnz} edges")
+    print(f"codes: {rt.codes.shape} uint32 (c={cfg.c}, m={cfg.m} per node)")
+
+    # -- 3. decoder trains with the downstream task -----------------------
+    rt.train(on_metrics=lambda s, m: print(f"step {s:3d}  loss {m['loss']:.4f}"))
+    va, te = rt.evaluate("val"), rt.evaluate("test")
+    print(f"val acc {va['accuracy']:.4f} / test acc {te['accuracy']:.4f} "
+          f"(chance {1/16:.4f})")
+
+    # -- 4. serve: hot nodes decode once, repeats hit the cache -----------
+    engine = rt.serve(serve_batch=128)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        res = engine.serve(rng.integers(0, N_NODES, 128))
+        print(f"request {i}: decoded {res.rows_decoded}/{res.rows_total} "
+              f"frontier rows, predictions {res.predictions[:6]}...")
+    print(f"serving stats: {engine.stats()}")
+    rt.close()
+
+    # -- 5. memory: the decoder is a FIXED cost (paper Table 4) -----------
+    b = memory_breakdown(N_NODES, 64, cfg.c, cfg.m, cfg.d_c, cfg.d_m, 3)
+    print(f"\nraw table    : {b.raw_table_bytes / MiB:8.2f} MiB")
+    print(f"codes        : {b.binary_code_bytes / MiB:8.2f} MiB")
+    print(f"decoder      : {b.trainable_decoder_bytes / MiB:8.2f} MiB")
+    print(f"ratio        : {b.ratio_total:8.2f}x")
+    emb_params = rt.params["embed"]
+    print(f"trainable params do not grow with nodes: "
+          f"{param_bytes(emb_params, trainable_only=True) / MiB:.2f} MiB")
+    for n in (100_000, 1_871_031, 1_000_000_000):
+        bb = memory_breakdown(n, 64, cfg.c, cfg.m, cfg.d_c, cfg.d_m, 3)
+        print(f"  at n={n:>13,}: raw {bb.raw_table_bytes/MiB:10.1f} MiB -> "
+              f"compressed {bb.compressed_total/MiB:8.1f} MiB  "
+              f"({bb.ratio_total:6.1f}x)")
 
 
-for step in range(100):
-    ids = jax.random.randint(jax.random.fold_in(key, step), (512,), 0, N_NODES)
-    params, opt_state, loss = train_step(params, opt_state, ids)
-    if step % 25 == 0:
-        print(f"step {step:3d}  loss {float(loss):.4f}")
-
-# -- 4. memory ----------------------------------------------------------------
-b = memory_breakdown(N_NODES, cfg.d_e, cfg.c, cfg.m, cfg.d_c, cfg.d_m, 3)
-print(f"\nraw table    : {b.raw_table_bytes / MiB:8.2f} MiB")
-print(f"codes        : {b.binary_code_bytes / MiB:8.2f} MiB")
-print(f"decoder      : {b.trainable_decoder_bytes / MiB:8.2f} MiB")
-print(f"ratio        : {b.ratio_total:8.2f}x")
-print(f"trainable params do not grow with nodes: "
-      f"{param_bytes(params, trainable_only=True) / MiB:.2f} MiB")
-# the decoder is a FIXED cost — the ratio grows with n (paper Table 4):
-for n in (100_000, 1_871_031, 1_000_000_000):
-    bb = memory_breakdown(n, cfg.d_e, cfg.c, cfg.m, cfg.d_c, cfg.d_m, 3)
-    print(f"  at n={n:>13,}: raw {bb.raw_table_bytes/MiB:10.1f} MiB -> "
-          f"compressed {bb.compressed_total/MiB:8.1f} MiB  ({bb.ratio_total:6.1f}x)")
+if __name__ == "__main__":
+    main()

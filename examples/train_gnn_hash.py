@@ -1,36 +1,26 @@
-"""End-to-end driver (paper §5.2/§5.3 scenario) on the streaming graph
-engine: GraphSAGE + hash-compressed node embeddings trained jointly with
+"""End-to-end driver (paper §5.2/§5.3 scenario) through the GraphRuntime:
+GraphSAGE + hash-compressed node embeddings trained jointly, evaluated on
+the held-out splits, all from ONE declarative ``RuntimeSpec``.
 
-  * dedup-decode minibatches — ``SageBatchSource`` emits unique-node
-    frontiers (``repro.graph.sampler.FrontierBatch``) so the decoder runs
-    once per unique node, not once per sampled position;
-  * async prefetch — ``PrefetchIterator`` samples and ``device_put``s the
-    next batch in a background thread while the jitted step runs;
-  * the unified model API — ``GNNModel.apply(params, batch)`` +
-    ``make_gnn_train_step`` drive training through the generic
-    fault-tolerant loop (``repro.train.run_training``), so checkpointing,
-    auto-resume and straggler monitoring come for free: kill this script
-    mid-run and re-run to watch it continue from the last checkpoint.
+The runtime owns the whole pipeline (graph → codes → state → sampler →
+batch source → prefetch → train step → fault-tolerant loop), so this file
+contains zero wiring: scaling to N shards, switching the decode backend or
+enabling the hot-node cache are spec field changes (`--shards`,
+``spec.with_updates(lookup_impl=..., cache_capacity=...)``).  Checkpoints
+carry the spec, so killing this script mid-run and re-running continues
+from the last checkpoint.
 
 Run:  PYTHONPATH=src python examples/train_gnn_hash.py [--steps 300]
       [--kind hash_full|random_full|dense] [--nodes 20000] [--no-prefetch]
+      [--shards N]
 """
 
 import argparse
 import time
 
-import jax
-import numpy as np
-
 from repro.configs.paper_gnn import paper_gnn_config
-from repro.core import embedding as emb_lib
-from repro.graph import NeighborSampler, powerlaw_graph
-from repro.graph.engine import GNNModel, PrefetchIterator, SageBatchSource
-from repro.graph.generate import train_val_test_split
-from repro.models import gnn
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
 from repro.optim import AdamWConfig
-from repro.train import (CheckpointManager, LoopConfig, init_gnn_train_state,
-                         make_gnn_train_step, run_training)
 
 
 def main():
@@ -42,52 +32,53 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/hashemb_gnn_run")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async host->device pipeline")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-parallel shards (needs >= N jax devices)")
     args = ap.parse_args()
 
-    key = jax.random.PRNGKey(0)
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=args.nodes,
+                          n_classes=args.classes, avg_degree=10,
+                          homophily=0.85),
+        model=paper_gnn_config("sage", n_nodes=args.nodes,
+                               n_classes=args.classes, kind=args.kind,
+                               fanout=10),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=256,
+        prefetch_depth=0 if args.no_prefetch else 2,
+        n_shards=args.shards,
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        log_every=25,
+    )
+
     t0 = time.time()
-    adj, labels = powerlaw_graph(0, args.nodes, avg_degree=10,
-                                 n_classes=args.classes, homophily=0.85)
-    print(f"[data] {args.nodes} nodes / {adj.nnz} edges in {time.time()-t0:.1f}s")
-
-    cfg = paper_gnn_config("sage", n_nodes=args.nodes, n_classes=args.classes,
-                           kind=args.kind, fanout=10)
-    codes = None
-    if cfg.embedding_config().is_compressed:
-        t0 = time.time()
-        codes = emb_lib.make_codes(key, cfg.embedding_config(), aux=adj)
-        print(f"[encode] Algorithm 1 in {time.time()-t0:.1f}s; "
-              f"codes {tuple(codes.shape)}")
-
-    state = init_gnn_train_state(key, cfg, codes=codes)
-    train_step = make_gnn_train_step(cfg, AdamWConfig(lr=1e-2, weight_decay=0.0))
-
-    sampler = NeighborSampler(adj, cfg.fanouts, max_deg=64, seed=0)
-    tr, va, te = train_val_test_split(0, args.nodes)
-    source = SageBatchSource(sampler, tr, labels, batch_size=256, seed=0)
-    data_iter = source if args.no_prefetch else PrefetchIterator(source, depth=2)
-
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    t0 = time.time()
+    rt = GraphRuntime.from_spec(spec)
+    print(f"[build] {args.nodes} nodes / {rt.adj.nnz} edges, "
+          f"codes {None if rt.codes is None else tuple(rt.codes.shape)}, "
+          f"{args.shards} shard(s) in {time.time()-t0:.1f}s")
 
     def on_metrics(step, m):
         print(f"[step {step:4d}] loss={m['loss']:.4f} "
               f"({m['step_time']*1e3:.0f} ms/step, ewma {m['ewma']*1e3:.0f} ms)")
 
-    res = run_training(train_step, state, data_iter,
-                       LoopConfig(total_steps=args.steps, ckpt_every=100,
-                                  log_every=25),
-                       ckpt=ckpt, on_metrics=on_metrics)
+    t0 = time.time()
+    res = rt.train(on_metrics=on_metrics)
     if res.resumed_from is not None:
         print(f"[resume] continued from step {res.resumed_from}")
     print(f"[train] {len(res.losses)} steps in {time.time()-t0:.1f}s "
           f"({res.stragglers} stragglers)")
 
-    model = GNNModel(cfg)
-    fb, batch = next(sampler.frontier_minibatches(te, 1000, shuffle=False))
-    h = model.apply(res.state["params"], jax.device_put(fb))
-    acc = gnn.accuracy(model.logits(res.state["params"], h), labels[batch])
-    print(f"[done] test acc = {acc:.4f}  (chance = {1/args.classes:.4f})")
+    # held-out splits: the runtime evaluates val AND test (paper protocol:
+    # model selection on val, report test)
+    va = rt.evaluate("val")
+    te = rt.evaluate("test")
+    print(f"[eval] val  acc = {va['accuracy']:.4f}  (loss {va['loss']:.4f}, "
+          f"n={va['n']})")
+    print(f"[eval] test acc = {te['accuracy']:.4f}  (loss {te['loss']:.4f}, "
+          f"n={te['n']}, chance = {1/args.classes:.4f})")
+    rt.close()
 
 
 if __name__ == "__main__":

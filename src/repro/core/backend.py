@@ -508,6 +508,102 @@ class CachedDecodeBackend:
         )
         return out, new_state
 
+    # -- miss-only decode (ROADMAP "Next": only misses enter the decoder) --
+    @staticmethod
+    def plan_missonly(cached_ids, ids, valid=None):
+        """Host-side miss partition for ``lookup_missonly``.
+
+        ``cached_ids`` is the host view of the cache's *fresh* entries
+        (``np.asarray(state.node_ids)`` when nothing can be stale, e.g. at
+        serving time where the version counter never moves; negative ids —
+        empty slots — are ignored).  Returns ``(perm, n_miss)``: a stable
+        permutation of ``ids`` placing every row that will miss (valid and
+        not cached) first, and the count of such rows.  The caller permutes
+        the frontier with ``perm`` (and its index maps with the inverse)
+        and hands the decoder only a padded prefix."""
+        import numpy as np
+        ids = np.asarray(ids)
+        if valid is None:
+            valid = np.ones(ids.shape[0], bool)
+        cached_ids = np.asarray(cached_ids)
+        cached_ids = cached_ids[cached_ids >= 0]
+        miss = np.asarray(valid, bool) & ~np.isin(ids, cached_ids)
+        perm = np.argsort(~miss, kind="stable").astype(np.int32)
+        return perm, int(miss.sum())
+
+    def lookup_missonly(self, state: CacheState, ids: Array,
+                        decode_fn: Callable[[Array], Array],
+                        n_decode: int, valid: Optional[Array] = None):
+        """Miss-only twin of ``lookup``: ``decode_fn`` runs ONLY on the
+        first ``n_decode`` rows (a static int — shape-bucketed jit), so the
+        decoder pays for misses instead of the whole frontier.
+
+        Contract (kept by ``plan_missonly``): the caller permuted ``ids``
+        miss-first, so every valid row at position >= ``n_decode`` is a
+        fresh cache hit.  Prefix rows that turn out to be hits anyway (the
+        miss-count padding) are still served from the cache, which keeps
+        the output bitwise identical to ``lookup``; a *miss* past the
+        prefix would read zeros — that is a planner bug, not a decode
+        fallback.  State updates (write-back, LRU, accounting) are
+        restricted to the decoded prefix."""
+        C = state.capacity
+        U = ids.shape[0]
+        d = state.values.shape[1]
+        eq = ids[:, None] == state.node_ids[None, :]          # (U, C)
+        found = eq.any(axis=1)
+        if valid is not None:
+            found = found & valid
+        slot = jnp.argmax(eq, axis=1)
+        age = state.version_counter - state.version[slot]
+        hit = found & (age <= self.staleness)
+
+        if n_decode > 0:
+            fresh_prefix = decode_fn(ids[:n_decode])          # (n_decode, d)
+            fresh = jnp.zeros((U, d), fresh_prefix.dtype)
+            fresh = fresh.at[:n_decode].set(fresh_prefix)
+        else:
+            fresh = jnp.zeros((U, d), state.values.dtype)
+        out = jnp.where(hit[:, None], state.values[slot].astype(fresh.dtype),
+                        fresh)
+
+        # ---- state update: identical to ``lookup`` but writes only rows
+        # the decoder actually produced (the prefix)
+        decoded = jnp.arange(U, dtype=jnp.int32) < n_decode
+        clock = state.clock + 1
+        n_valid = (jnp.int32(U) if valid is None
+                   else valid.sum(dtype=jnp.int32))
+        n_hit = hit.sum(dtype=jnp.int32)
+
+        hidx = jnp.where(hit, slot, C)
+        last_used = state.last_used.at[hidx].set(clock, mode="drop")
+
+        protected = jnp.zeros((C,), bool).at[jnp.where(found, slot, C)].set(
+            True, mode="drop")
+        n_free = C - protected.sum(dtype=jnp.int32)
+        evict_order = jnp.argsort(
+            jnp.where(protected, jnp.iinfo(jnp.int32).max, last_used))
+        needs_slot = ~found & decoded
+        if valid is not None:
+            needs_slot = needs_slot & valid
+        rank = jnp.cumsum(needs_slot.astype(jnp.int32)) - 1
+        new_slot = evict_order[jnp.clip(rank, 0, C - 1)]
+        write = (~hit) & decoded & (found | (needs_slot & (rank < n_free)))
+        widx = jnp.where(write, jnp.where(found, slot, new_slot), C)
+
+        wvals = jax.lax.stop_gradient(fresh).astype(state.values.dtype)
+        new_state = CacheState(
+            node_ids=state.node_ids.at[widx].set(ids, mode="drop"),
+            values=state.values.at[widx].set(wvals, mode="drop"),
+            version=state.version.at[widx].set(state.version_counter,
+                                               mode="drop"),
+            last_used=last_used.at[widx].set(clock, mode="drop"),
+            version_counter=state.version_counter,
+            clock=clock,
+            hits=state.hits + n_hit,
+            misses=state.misses + (n_valid - n_hit),
+        )
+        return out, new_state
+
     @staticmethod
     def bump_version(state: CacheState) -> CacheState:
         """Codebook/decoder update notification — call once per optimizer

@@ -7,6 +7,12 @@ from repro.graph.generate import (
 )
 from repro.graph.sampler import FrontierBatch, NeighborSampler
 
+# runtime names resolve lazily: repro.graph.runtime pulls in the train/
+# serving layers, which must not load just because someone imported the
+# sampler (and would otherwise risk partially-initialised import cycles)
+_RUNTIME_EXPORTS = ("GraphRuntime", "RuntimeSpec", "GraphSource",
+                    "FullGraphSource")
+
 __all__ = [
     "CSRMatrix",
     "powerlaw_graph",
@@ -15,4 +21,12 @@ __all__ = [
     "clustered_embeddings",
     "FrontierBatch",
     "NeighborSampler",
+    *_RUNTIME_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    if name in _RUNTIME_EXPORTS:
+        from repro.graph import runtime as _runtime
+        return getattr(_runtime, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -129,12 +129,15 @@ class GNNModel:
 
 def batch_view(batch: Dict[str, Any]) -> Batch:
     """Extract the model-facing view from a batch dict produced by the
-    sources below ({"frontier": ...} or {"levels": ...})."""
+    sources below ({"frontier": ...}, {"levels": ...}) or the runtime's
+    full-graph source ({"full": FullGraphBatch, "ids": ..., "labels": ...})."""
     if "frontier" in batch:
         return batch["frontier"]
     if "levels" in batch:
         return batch["levels"]
-    raise KeyError("batch dict has neither 'frontier' nor 'levels'")
+    if "full" in batch:
+        return batch["full"]
+    raise KeyError("batch dict has none of 'frontier' / 'levels' / 'full'")
 
 
 # ---------------------------------------------------------------------------

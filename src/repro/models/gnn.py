@@ -156,6 +156,31 @@ def sage_forward_frontier_cached(params, fb: FrontierBatch, cfg: GNNConfig,
     return _sage_combine(params, h0, h1, h2), new_state
 
 
+def sage_forward_frontier_missonly(params, fb: FrontierBatch, cfg: GNNConfig,
+                                   cache_state, n_decode: int, backend=None):
+    """Serving twin of ``sage_forward_frontier_cached``: the frontier has
+    been permuted miss-first host-side (``CachedDecodeBackend.
+    plan_missonly``) so only the first ``n_decode`` rows — a static,
+    shape-bucketed count — enter the decoder; every other valid row is
+    served from the hot-node cache.  Returns ``(hidden, new_cache_state)``,
+    bitwise identical to the uncached frontier forward."""
+    from repro.core.backend import CachedDecodeBackend
+
+    ecfg = cfg.embedding_config()
+    cache = CachedDecodeBackend(staleness=ecfg.cache_staleness)
+    ids = sharding.logical(fb.unique, "frontier")
+    hu, new_state = cache.lookup_missonly(
+        cache_state, ids,
+        lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,
+                                       backend=backend),
+        n_decode, valid=fb.valid_mask())
+    hu = sharding.logical(hu, "frontier", None)
+    h0 = hu[fb.index_maps[0]]
+    h1 = hu[fb.index_maps[1]]
+    h2 = hu[fb.index_maps[2]]
+    return _sage_combine(params, h0, h1, h2), new_state
+
+
 # ---------------------------------------------------------------------------
 # full-graph models
 # ---------------------------------------------------------------------------

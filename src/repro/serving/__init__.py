@@ -1,3 +1,7 @@
-from repro.serving.engine import DecodeEngine, GenerationResult
+from repro.serving.engine import DecodeEngine, Engine, GenerationResult
+from repro.serving.gnn import GraphInferenceEngine, GraphServeResult
 
-__all__ = ["DecodeEngine", "GenerationResult"]
+__all__ = [
+    "DecodeEngine", "Engine", "GenerationResult",
+    "GraphInferenceEngine", "GraphServeResult",
+]

@@ -1,16 +1,24 @@
-"""Batched decode engine (examples + serving benchmarks).
+"""Batched serving engines behind one ``Engine`` protocol.
 
-Minimal production shape: a fixed-batch continuous loop over
-prefill -> decode steps with greedy/temperature sampling, KV/SSM caches from
-models.lm, and per-request completion tracking.  Distribution comes from the
-same pjit policy as the dry-run (params_shardings / cache_shardings_policy);
-on one host it just runs jit'd.
+Two engines share the serving surface: the LM ``DecodeEngine`` (prefill →
+per-token decode against KV/SSM caches) and the GNN
+``GraphInferenceEngine`` (``repro.serving.gnn``: frontier sample →
+miss-only cached decode → forward).  Both freeze params at construction,
+fail fast on unknown decode-backend names, run fixed-shape jitted steps,
+and expose one batched ``serve(requests)`` entry point — which is what the
+``Engine`` protocol pins down, so callers (examples, benchmarks, the CI
+serve smoke) can drive either engine without caring which workload is
+behind it.
+
+Distribution comes from the same pjit policy as the dry-run
+(params_shardings / cache_shardings_policy); on one host everything just
+runs jit'd.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +28,20 @@ from repro.configs.base import LMConfig
 from repro.core import backend as backend_mod
 from repro.models.lm import init_cache, lm_forward
 from repro.train.step import make_prefill_step, make_serve_step
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Shared serving surface: frozen params + fixed-shape jitted steps
+    behind one batched request entry point.
+
+    ``serve(requests, **kwargs)`` takes one request batch (token prompts
+    for the LM engine, node ids for the GNN engine) and returns a
+    result dataclass; engines may add richer typed methods beside it
+    (``generate``, ``embed``, ``predict``), but ``serve`` is the common
+    denominator the protocol guarantees."""
+
+    def serve(self, requests, **kwargs): ...
 
 
 @dataclasses.dataclass
@@ -78,3 +100,9 @@ class DecodeEngine:
             last_logits, cache = self._serve(self.params, cache, {"tokens": nxt_tok})
         return GenerationResult(
             tokens=np.asarray(jnp.concatenate(out, axis=1)), steps=max_new_tokens)
+
+    def serve(self, requests, max_new_tokens: int = 32,
+              **kwargs) -> GenerationResult:
+        """``Engine``-protocol entry point: one batch of prompts in, a
+        ``GenerationResult`` out (thin alias of ``generate``)."""
+        return self.generate(np.asarray(requests), max_new_tokens, **kwargs)

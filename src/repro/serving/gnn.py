@@ -1,0 +1,233 @@
+"""Batched GNN inference engine (the §5.3 merchant-system serving shape).
+
+``GraphInferenceEngine`` is the GNN twin of the LM ``DecodeEngine`` behind
+the shared ``serving.Engine`` protocol: frozen params, fixed-shape jitted
+steps, a batched request entry point.  Per request:
+
+    sample frontier  →  miss-only cached decode  →  forward  →  (h, logits)
+
+The decode path is where serving differs from training: request streams
+revisit hot (high-degree) nodes constantly and the params never change
+between requests, so a decoded embedding never goes stale.  The engine
+therefore keeps a device-resident ``CacheState`` across requests and
+partitions every frontier host-side (``CachedDecodeBackend.plan_missonly``)
+into a padded miss-prefix — **only cache misses enter the decoder**, and
+``rows_decoded`` (vs the full frontier row count) is the measured win
+(``benchmarks/serving_gnn.py``, ``BENCH_decode.json``).
+
+Fixed shapes: the request batch pads to ``serve_batch`` and the frontier to
+an exact ``frontier_cap``, so the forward jits once per miss-count bucket
+(buckets grow geometrically from ``pad_to``, bounding compilations at
+~log2(cap/pad_to) + 2).
+
+Bit-exactness: hits are embeddings the same frozen params decoded earlier,
+so ``engine.embed(ids)`` equals ``GNNModel.apply`` on the same frontier
+bitwise — cache reuse is free at serving time (tests/test_runtime.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.core import backend as backend_mod
+from repro.core.backend import CachedDecodeBackend, CacheState
+from repro.graph.sampler import FrontierBatch, NeighborSampler
+from repro.models import gnn as gnn_lib
+
+
+@dataclasses.dataclass
+class GraphServeResult:
+    """One served request batch."""
+    embeddings: np.ndarray              # (B, H) final hidden per node
+    logits: Optional[np.ndarray]        # (B, n_classes) when task == "node"
+    predictions: Optional[np.ndarray]   # (B,) argmax labels (node task)
+    rows_decoded: int                   # decoder rows this request paid
+    rows_total: int                     # frontier rows (padded cap)
+
+
+class GraphInferenceEngine:
+    """Frozen-params GNN serving over the minibatched GraphSAGE path.
+
+    ``decode_backend`` pins the embedding decode path (same contract as
+    ``DecodeEngine``): ``None`` keeps the config's ``lookup_impl``,
+    ``"auto"`` resolves for the current runtime, unknown names fail here —
+    at engine construction — not on the first request.  ``cache_capacity``
+    sizes the cross-request hot-node cache (0 disables it; the default
+    keeps ~4 frontiers' worth of rows).
+    """
+
+    def __init__(self, cfg: GNNConfig, params, sampler: NeighborSampler, *,
+                 decode_backend: Optional[str] = None, serve_batch: int = 256,
+                 frontier_cap: Optional[int] = None, pad_to: int = 256,
+                 cache_capacity: Optional[int] = None, seed: int = 0,
+                 interpret: bool = False):
+        if cfg.model != "sage":
+            raise ValueError(
+                f"GraphInferenceEngine serves minibatched GraphSAGE; got "
+                f"model={cfg.model!r} (full-graph models evaluate via "
+                f"GraphRuntime.evaluate)")
+        if decode_backend is not None:
+            resolved = (backend_mod.resolve_auto()
+                        if decode_backend == "auto" else decode_backend)
+            backend_mod.get_backend(resolved, interpret=interpret)
+            cfg = dataclasses.replace(
+                cfg, embedding=dataclasses.replace(
+                    cfg.embedding, lookup_impl=resolved))
+        self.cfg = cfg
+        self.params = params
+        self.sampler = sampler
+        self.serve_batch = int(serve_batch)
+        self.pad_to = int(pad_to)
+        self.seed = int(seed)
+        self.interpret = bool(interpret)
+        ecfg = cfg.embedding_config()
+        self._backend = backend_mod.get_backend(ecfg.lookup_impl,
+                                                interpret=interpret)
+
+        from repro.graph.engine import default_frontier_cap
+        self.frontier_cap = int(
+            frontier_cap if frontier_cap is not None
+            else default_frontier_cap(self.serve_batch, cfg.fanouts,
+                                      self.pad_to, cfg.n_nodes))
+
+        if cache_capacity is None:
+            cache_capacity = (min(4 * self.frontier_cap, cfg.n_nodes)
+                              if ecfg.is_compressed else 0)
+        self.cache_capacity = int(cache_capacity)
+        self.cached = ecfg.is_compressed and self.cache_capacity > 0
+        # params are frozen at serve time, so the version counter never
+        # bumps and staleness 0 still means "every hit is forever fresh"
+        self._cache = CachedDecodeBackend(staleness=0)
+        self._cache_state = (CacheState.create(
+            self.cache_capacity, cfg.d_e,
+            jax.numpy.dtype(cfg.compute_dtype)) if self.cached else None)
+
+        self._fwd_cache: Dict[int, object] = {}
+        self._requests = 0
+        self._rows_decoded = 0
+        self._rows_total = 0
+
+    # -- internals -------------------------------------------------------
+    def frontier_for(self, node_ids, request_index: Optional[int] = None
+                     ) -> FrontierBatch:
+        """The exact (padded, fixed-cap) frontier ``serve`` samples for a
+        request — exposed so parity tests can run ``GNNModel.apply`` on the
+        same batch.  Deterministic in ``(seed, request_index)``."""
+        ids = self._pad_request(np.asarray(node_ids, np.int32))
+        ri = self._requests if request_index is None else request_index
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + 777_767_777) + ri)
+        levels = self.sampler.sample(ids, rng=rng)
+        return FrontierBatch.from_levels(levels, pad_to=self.pad_to,
+                                         cap=self.frontier_cap)
+
+    def _pad_request(self, ids: np.ndarray) -> np.ndarray:
+        if ids.shape[0] > self.serve_batch:
+            raise ValueError(
+                f"request batch {ids.shape[0]} > serve_batch "
+                f"{self.serve_batch}; chunk requests host-side")
+        if ids.shape[0] < self.serve_batch:
+            ids = np.concatenate(
+                [ids, np.full(self.serve_batch - ids.shape[0], ids[0],
+                              ids.dtype)])
+        return ids
+
+    def _bucket(self, n_miss: int) -> int:
+        """Geometric miss-count buckets: one jit shape per bucket."""
+        if n_miss <= 0:
+            return 0
+        b = self.pad_to
+        while b < n_miss:
+            b *= 2
+        return min(b, self.frontier_cap)
+
+    def _forward(self, n_decode: int):
+        if n_decode not in self._fwd_cache:
+            cfg, backend = self.cfg, self._backend
+            node_task = cfg.task == "node"
+
+            if self.cached:
+                def fwd(params, fb, cache_state):
+                    h, new_state = gnn_lib.sage_forward_frontier_missonly(
+                        params, fb, cfg, cache_state, n_decode,
+                        backend=backend)
+                    logits = (gnn_lib.node_logits(params, h, cfg)
+                              if node_task else None)
+                    return h, logits, new_state
+            else:
+                def fwd(params, fb, cache_state):
+                    h = gnn_lib.sage_forward_frontier(params, fb, cfg,
+                                                      backend=backend)
+                    logits = (gnn_lib.node_logits(params, h, cfg)
+                              if node_task else None)
+                    return h, logits, cache_state
+            self._fwd_cache[n_decode] = jax.jit(fwd)
+        return self._fwd_cache[n_decode]
+
+    # -- request API -----------------------------------------------------
+    def serve(self, node_ids, **_ignored) -> GraphServeResult:
+        """Serve one request batch of node ids (≤ ``serve_batch``)."""
+        ids = np.asarray(node_ids, np.int32)
+        B = ids.shape[0]
+        fb = self.frontier_for(ids)
+        cap = self.frontier_cap
+
+        if self.cached:
+            host_ids = np.asarray(self._cache_state.node_ids)
+            valid = np.arange(cap) < int(fb.n_unique)
+            perm, n_miss = CachedDecodeBackend.plan_missonly(
+                host_ids, np.asarray(fb.unique), valid)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(perm.shape[0], dtype=np.int32)
+            fb = FrontierBatch(
+                unique=np.asarray(fb.unique)[perm],
+                index_maps=tuple(inv[np.asarray(m)] for m in fb.index_maps),
+                n_unique=fb.n_unique,
+                valid=valid[perm])
+            n_dec = self._bucket(n_miss)
+            h, logits, self._cache_state = self._forward(n_dec)(
+                self.params, jax.device_put(fb), self._cache_state)
+        else:
+            n_dec = cap
+            h, logits, _ = self._forward(-1)(self.params, jax.device_put(fb),
+                                             None)
+
+        self._requests += 1
+        self._rows_decoded += n_dec
+        self._rows_total += cap
+
+        h = np.asarray(h)[:B]
+        logits = None if logits is None else np.asarray(logits)[:B]
+        preds = None if logits is None else logits.argmax(-1).astype(np.int32)
+        return GraphServeResult(embeddings=h, logits=logits,
+                                predictions=preds, rows_decoded=n_dec,
+                                rows_total=cap)
+
+    def embed(self, node_ids) -> np.ndarray:
+        """Final hidden representations (B, H) — bitwise identical to
+        ``GNNModel.apply`` on ``frontier_for(node_ids)``."""
+        return self.serve(node_ids).embeddings
+
+    def predict(self, node_ids) -> np.ndarray:
+        """Argmax class per requested node (node-classification task)."""
+        res = self.serve(node_ids)
+        if res.predictions is None:
+            raise ValueError("predict() needs a node-classification config")
+        return res.predictions
+
+    def stats(self) -> Dict[str, float]:
+        """Cumulative serving counters (the cache's rows_decoded claim)."""
+        out = {"requests": self._requests,
+               "rows_decoded": self._rows_decoded,
+               "rows_total": self._rows_total}
+        if self.cached:
+            st = self._cache_state
+            hits, misses = int(st.hits), int(st.misses)
+            out.update(hits=hits, misses=misses,
+                       hit_rate=hits / max(hits + misses, 1))
+        return out

@@ -140,6 +140,17 @@ class CheckpointManager:
         state = _unflatten_into(state_template, flat)
         return state, manifest["extra"]
 
+    def read_extra(self, step: Optional[int] = None) -> Optional[Dict]:
+        """Read just the ``extra`` manifest of a checkpoint (latest by
+        default) without touching the arrays — enough to recover e.g. the
+        runtime spec before any state template exists.  None if the
+        directory holds no checkpoint."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        with open(os.path.join(self._path(step), "manifest.json")) as f:
+            return json.load(f)["extra"]
+
     def restore_latest(self, state_template: Any) -> Optional[Tuple[int, Any, Dict]]:
         step = self.latest_step()
         if step is None:

@@ -50,7 +50,16 @@ def run_training(
     ckpt: Optional[CheckpointManager] = None,
     to_device: Callable = lambda b: b,
     on_metrics: Optional[Callable[[int, Dict], None]] = None,
+    extra_base: Optional[Dict] = None,
+    prejitted: bool = False,
 ) -> LoopResult:
+    """``extra_base``: JSON-able dict merged into every checkpoint's
+    ``extra`` manifest (e.g. the GraphRuntime spec, so a checkpoint is
+    self-describing enough to rebuild its whole pipeline).
+
+    ``prejitted``: ``train_step`` is already a donated-state jitted
+    callable — use it as-is so repeat ``run_training`` calls (chunked
+    training) reuse its compile cache instead of re-tracing."""
     resumed_from = None
     start_step = 0
     if ckpt is not None:
@@ -64,7 +73,8 @@ def run_training(
     losses, step_times = [], []
     stragglers = 0
     ewma = None
-    jitted = jax.jit(train_step, donate_argnums=(0,))
+    jitted = train_step if prejitted else jax.jit(train_step,
+                                                  donate_argnums=(0,))
 
     try:
         for step in range(start_step, loop_cfg.total_steps):
@@ -87,13 +97,13 @@ def run_training(
                 on_metrics(step, {"loss": loss, "step_time": dt, "ewma": ewma})
 
             if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
-                extra = {}
+                extra = dict(extra_base or {})
                 if hasattr(data_iter, "state_dict"):
                     extra["data"] = data_iter.state_dict()
                 ckpt.save(step + 1, state, extra)
 
         if ckpt is not None:
-            extra = {}
+            extra = dict(extra_base or {})
             if hasattr(data_iter, "state_dict"):
                 extra["data"] = data_iter.state_dict()
             ckpt.save(loop_cfg.total_steps, state, extra)

@@ -169,17 +169,25 @@ def make_gnn_train_step(cfg: GNNConfig,
         view = batch_view(batch)
         cached = "cache" in state
 
+        def _logits(p, h):
+            # full-graph batches carry the training-node ids: the model
+            # returns hidden for ALL nodes and the loss reads the subset
+            logits = model.logits(p, h)
+            if "ids" in batch:
+                logits = logits[batch["ids"]]
+            return logits
+
         if cached:
             def loss_fn(p, c):
                 h, new_c = model.apply_cached(p, view, c)
-                return gnn.node_loss(model.logits(p, h), batch["labels"]), new_c
+                return gnn.node_loss(_logits(p, h), batch["labels"]), new_c
             (loss, new_cache), g = jax.value_and_grad(
                 loss_fn, has_aux=True, allow_int=True)(
                     state["params"], state["cache"])
         else:
             def loss_fn(p):
                 h = model.apply(p, view)
-                return gnn.node_loss(model.logits(p, h), batch["labels"])
+                return gnn.node_loss(_logits(p, h), batch["labels"])
             loss, g = jax.value_and_grad(loss_fn, allow_int=True)(state["params"])
 
         params, opt_state = adamw_update(state["params"], g, state["opt"], ocfg)

@@ -42,11 +42,13 @@ def iter_modules() -> list:
 
 
 def iter_script_modules() -> list:
-    """``benchmarks.*`` and ``tools.*`` modules (namespace packages rooted
-    at the repo) — the CI runs ``python -m benchmarks.run``, so a benchmark
-    that stops importing is a broken CI leg, not someone else's problem."""
+    """``benchmarks.*``, ``tools.*`` and ``examples.*`` modules (namespace
+    packages rooted at the repo) — the CI runs ``python -m benchmarks.run``
+    and the ``--examples`` smoke leg, so a script that stops importing is a
+    broken CI leg, not someone else's problem.  Entry points may only *run*
+    work behind ``main()`` / ``__main__`` guards, never at import time."""
     mods = []
-    for pkg in ("benchmarks", "tools"):
+    for pkg in ("benchmarks", "tools", "examples"):
         for py in sorted((ROOT / pkg).glob("*.py")):
             if py.stem != "__init__":
                 mods.append(f"{pkg}.{py.stem}")
@@ -66,7 +68,7 @@ def check_src_imports() -> int:
             print(f"FAIL import {mod}")
             traceback.print_exc(limit=3)
     print(f"[check_imports] src: {len(src_mods)} modules + "
-          f"{len(script_mods)} benchmark/tool modules, "
+          f"{len(script_mods)} benchmark/tool/example modules, "
           f"{failures} import failure(s)")
     return failures
 

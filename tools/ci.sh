@@ -16,6 +16,12 @@
 #                              devices on a CPU-only container.  Runs ONLY
 #                              the marked tests: the tier-1 suite must keep
 #                              its single-device view (tests/conftest.py).
+#   tools/ci.sh --examples     import gate + examples smoke, WITHOUT the
+#                              tier-1 pytest: runs the GraphRuntime front
+#                              door end to end — `train_gnn_hash.py --steps
+#                              2` (train + val/test eval + checkpoint) and a
+#                              2-request `GraphInferenceEngine` serve via
+#                              `serve_gnn.py` — so the examples can't rot.
 #
 # Mirrors ROADMAP "Tier-1 verify": import/collection health is a gate that
 # runs BEFORE the suite, so a broken optional dep fails loudly here instead
@@ -27,13 +33,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 RUN_BENCH=0
 RUN_MULTI=0
+RUN_EXAMPLES=0
 RUN_SUITE=1
 for arg in "$@"; do
     case "$arg" in
         --bench)       RUN_BENCH=1 ;;
         --bench-only)  RUN_BENCH=1; RUN_SUITE=0 ;;
         --multidevice) RUN_MULTI=1 ;;
-        *) echo "usage: tools/ci.sh [--bench|--bench-only] [--multidevice]" >&2
+        --examples)    RUN_EXAMPLES=1; RUN_SUITE=0 ;;
+        *) echo "usage: tools/ci.sh [--bench|--bench-only] [--multidevice] [--examples]" >&2
            exit 2 ;;
     esac
 done
@@ -53,6 +61,16 @@ fi
 if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== [extra] benchmark smoke =="
     python -m benchmarks.run --smoke
+fi
+
+if [[ "$RUN_EXAMPLES" == 1 ]]; then
+    echo "== [2/2] examples smoke (GraphRuntime train/eval/serve) =="
+    CKPT_DIR="$(mktemp -d)"
+    python examples/train_gnn_hash.py --steps 2 --nodes 2000 --classes 8 \
+        --ckpt-dir "$CKPT_DIR"
+    rm -rf "$CKPT_DIR"
+    python examples/serve_gnn.py --nodes 2000 --steps 2 --requests 2 \
+        --batch 64
 fi
 
 echo "CI OK"
