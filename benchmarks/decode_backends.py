@@ -14,10 +14,14 @@ commit.
 
 Reading the numbers on a CPU container: ``pallas`` runs in interpret mode
 (a semantics check, orders of magnitude off kernel speed — compare backends
-on a TPU runtime).  The cache's win column is ``rows_decoded``: during
-training the select-based cache still decodes every row (misses are the
-*claimable* win), but the ``cached_missonly`` serving row pays the decoder
-for **misses only** — the frontier is partitioned host-side into a padded
+on a TPU runtime).  Every entry reports ``rows_decoded`` (plain backends
+decode the whole padded frontier; stating it explicitly keeps gather /
+onehot / pallas comparable in one table with the cached rows here, the
+sharded/owner rows in ``BENCH_shard.json``, and the serving path).  The
+cache's win column is that ``rows_decoded``: during training the
+select-based cache still decodes every row (misses are the *claimable*
+win), but the ``cached_missonly`` serving row pays the decoder for
+**misses only** — the frontier is partitioned host-side into a padded
 miss-prefix (``CachedDecodeBackend.plan_missonly``), so ``rows_decoded``
 there is work actually skipped, not an accounting fiction.
 """
@@ -92,10 +96,16 @@ def run():
         t_bwd = time_fn(grad, params["embed"], fb.unique)
         note = "interpret" if (name == "pallas"
                                and jax.default_backend() != "tpu") else "native"
-        emit(f"decode_backends/{name}/fwd", t_fwd, f"rows={rows} {note}")
-        emit(f"decode_backends/{name}/fwd_bwd", t_bwd, f"rows={rows} {note}")
+        # rows_decoded on EVERY entry (not just cached ones) so plain /
+        # sharded / owner / cached backends compare in one table: a plain
+        # backend's decoder runs on the whole padded frontier
+        emit(f"decode_backends/{name}/fwd", t_fwd,
+             f"rows={rows} rows_decoded={rows} {note}")
+        emit(f"decode_backends/{name}/fwd_bwd", t_bwd,
+             f"rows={rows} rows_decoded={rows} {note}")
         report["backends"][name] = {
-            "fwd_us": t_fwd, "fwd_bwd_us": t_bwd, "rows": rows, "mode": note}
+            "fwd_us": t_fwd, "fwd_bwd_us": t_bwd, "rows": rows,
+            "rows_decoded": rows, "mode": note}
     rt.close()
 
     # ---- cached decode: training throughput + hit accounting ------------
@@ -128,6 +138,12 @@ def run():
                          rows_decoded_per_step=misses / n_steps)
             derived += (f" hit_rate={hits / total:.2f}"
                         f" rows_decoded={misses / n_steps:.0f}/{rows}")
+        else:
+            # uncached training decodes the whole padded frontier per step —
+            # stated explicitly so every row of the table carries the same
+            # rows_decoded accounting
+            entry["rows_decoded_per_step"] = rows
+            derived += f" rows_decoded={rows}/{rows}"
         emit(f"decode_backends/{label}/step", per_step, derived)
         report["backends"][label] = entry
 

@@ -21,10 +21,16 @@ Four implementations are registered:
            mesh's data axis, decoded shard-local (``shard_map``) by a base
            backend (``"sharded:gather"`` pins it), rows all_gathered forward
            and codebook/W0 cotangents psummed in the custom VJP.
+  owner    owner-computes cross-shard dedup: rows hash-partitioned by
+           ``node_id % n_shards``, requests ``all_to_all``ed to their owner,
+           each distinct owned id decoded exactly once, embeddings
+           ``all_to_all``ed back (routing = a host-built static-capacity
+           ``graph.sampler.OwnerPlan`` riding on the batch).
 
 Selection is by config string (``lookup_impl``): a backend name, or ``auto``
-which picks ``sharded`` under a multi-device mesh, ``pallas`` on TPU-capable
-runtimes and ``onehot`` otherwise.  New backends register via
+which under a multi-device mesh picks ``owner`` when the measured frontier
+duplication beats ``OWNER_DUP_THRESHOLD`` (else ``sharded``), ``pallas`` on
+TPU-capable runtimes and ``onehot`` otherwise.  New backends register via
 ``register_backend`` and become selectable by name everywhere at once.
 
 ``CachedDecodeBackend`` layers a device-resident LRU of *decoded embeddings*
@@ -86,6 +92,14 @@ class DecodeBackend:
     def decode(self, codes: Array, codebooks: Array,
                w0: Optional[Array] = None) -> Array:
         raise NotImplementedError
+
+    def decode_frontier(self, codes: Array, codebooks: Array,
+                        w0: Optional[Array] = None, *, plan=None) -> Array:
+        """Frontier-decode entry point: like ``decode`` but may exploit a
+        host-built ``graph.sampler.OwnerPlan`` riding on the batch.  The
+        default ignores the plan (decoding every row is always correct);
+        only collective backends (``owner``) override it."""
+        return self.decode(codes, codebooks, w0)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<DecodeBackend {self.name}>"
@@ -241,6 +255,24 @@ def _sharded_decode(base: DecodeBackend, mesh, axis: str,
     return decode(codes, codebooks, w0)
 
 
+def _active_mesh_axis(mesh, axis):
+    """Resolve the (mesh, data-axis) pair a collective backend runs over:
+    the pinned mesh if any, else the ``use_sharding`` context's at trace
+    time; ``(None, None)`` means single-device (degrade to base)."""
+    from repro.parallel import sharding as sh
+    mesh = mesh if mesh is not None else sh.current_mesh()
+    if mesh is None:
+        return None, None
+    return mesh, (axis or sh.data_axis(mesh))
+
+
+def _check_collective_base(name: str, base) -> None:
+    if isinstance(base, str) and base.split(":")[0] in ("sharded", "owner"):
+        raise ValueError(
+            f"{name} backend cannot wrap itself or another collective "
+            f"backend (got base={base!r})")
+
+
 class ShardedBackend(DecodeBackend):
     """Data-parallel decode: frontier rows are partitioned across the mesh's
     data axis and decoded shard-local by a wrapped base backend (each shard's
@@ -264,19 +296,14 @@ class ShardedBackend(DecodeBackend):
                  mesh=None, interpret: bool = False):
         if base is None:
             base = "pallas" if jax.default_backend() == "tpu" else "onehot"
-        if isinstance(base, str) and base.split(":")[0] == "sharded":
-            raise ValueError("sharded backend cannot wrap itself")
+        _check_collective_base("sharded", base)
         self.base = get_backend(base, interpret=interpret)
         self.axis = axis
         self.mesh = mesh
         self.preferred_pad = self.base.preferred_pad
 
     def _mesh_axis(self):
-        from repro.parallel import sharding as sh
-        mesh = self.mesh if self.mesh is not None else sh.current_mesh()
-        if mesh is None:
-            return None, None
-        return mesh, (self.axis or sh.data_axis(mesh))
+        return _active_mesh_axis(self.mesh, self.axis)
 
     def decode(self, codes, codebooks, w0=None):
         mesh, axis = self._mesh_axis()
@@ -301,6 +328,162 @@ class ShardedBackend(DecodeBackend):
 
 
 # ---------------------------------------------------------------------------
+# owner-computes (cross-shard dedup) decode
+# ---------------------------------------------------------------------------
+
+def _owner_decode(base: DecodeBackend, mesh, axis: str,
+                  codes: Array, codebooks: Array, w0: Array, plan) -> Array:
+    """Owner-computes cross-shard frontier decode under ``shard_map``.
+
+    Layout (all static, from the host-built ``OwnerPlan``): each shard's
+    local frontier block has ``cap`` rows; requests are bucketed by
+    ``owner = id % n`` into ``owner_cap`` slots per (requester, owner) pair.
+
+        requester s: send[o, k]  = codes[req_rows[s, o, k]]      (gather)
+                     ── all_to_all ─▶
+        owner o:     owned[j]    = recv.flat[owned_src[o, j]]    (dedup)
+                     dec         = base.decode(owned)            (ONCE per id)
+                     ret[s, k]   = dec[ret_idx[o, s, k]]         (fan back out)
+                     ── all_to_all ─▶
+        requester s: out[req_rows[s, o, k]] = back[o, k]         (scatter)
+
+    The forward ``all_gather``s the scattered blocks so the post-decode
+    combine sees the full batch (same contract as the ``sharded`` backend).
+    The custom VJP routes cotangents back through the same permutation:
+    each requester slices its block of the (replicated) cotangent, sends it
+    through the reverse exchange, and the owner scatter-*adds* the
+    per-requester contributions onto its owned rows — so every decoded row's
+    cotangent is accumulated exactly once, on its owner, before one
+    ``base.decode`` VJP per owner produces disjoint codebook partials (the
+    closing ``psum`` only sums those disjoint partials into the replicated
+    codebook gradient; no duplicate row is ever double-counted)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import all_to_all, shard_map
+
+    n = int(plan.req_rows.shape[0])
+    oc = int(plan.req_rows.shape[2])
+    cap = codes.shape[0] // n
+    d = codebooks.shape[2]
+    ou = int(plan.owned_src.shape[1])
+    plan_specs = (P(axis, None, None), P(axis, None), P(axis, None, None))
+
+    def _owned_codes(codes_l, rr, os_l):
+        """Requester-side gather + all_to_all + owner-side dedup gather."""
+        send = codes_l[jnp.clip(rr, 0, cap - 1)]            # (n, oc, m)
+        recv = all_to_all(send, axis)                       # (n, oc, m)
+        return recv.reshape(n * oc, -1)[os_l]               # (ou, m)
+
+    @jax.custom_vjp
+    def decode(codes, req_rows, owned_src, ret_idx, cb, w0):
+        def local(codes_l, rr_l, os_l, ri_l, cb_, w0_):
+            rr = rr_l[0]
+            dec = base.decode(_owned_codes(codes_l, rr, os_l[0]), cb_, w0_)
+            back = all_to_all(dec[ri_l[0]], axis)           # (n, oc, d)
+            out_l = jnp.zeros((cap, d), dec.dtype).at[rr.reshape(-1)].set(
+                back.reshape(-1, d), mode="drop")           # sentinel cap drops
+            return jax.lax.all_gather(out_l, axis, axis=0, tiled=True)
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None),) + plan_specs
+            + (P(None, None, None), P(None)),
+            out_specs=P(None, None), check_vma=False)(
+                codes, req_rows, owned_src, ret_idx, cb, w0)
+
+    def fwd(codes, req_rows, owned_src, ret_idx, cb, w0):
+        out = decode(codes, req_rows, owned_src, ret_idx, cb, w0)
+        return out, (codes, req_rows, owned_src, ret_idx, cb, w0)
+
+    def bwd(res, g):
+        codes, req_rows, owned_src, ret_idx, cb, w0 = res
+
+        def local(codes_l, rr_l, os_l, ri_l, g_full, cb_, w0_):
+            rr = rr_l[0]
+            owned = _owned_codes(codes_l, rr, os_l[0])
+            s = jax.lax.axis_index(axis)
+            g_blk = jax.lax.dynamic_slice_in_dim(g_full, s * cap, cap, 0)
+            g_send = (g_blk[jnp.clip(rr, 0, cap - 1)]
+                      * (rr < cap)[..., None].astype(g_full.dtype))
+            g_recv = all_to_all(g_send, axis)               # (n, oc, d)
+            ghat = jnp.zeros((ou, d), g_full.dtype).at[
+                ri_l[0].reshape(-1)].add(g_recv.reshape(-1, d))
+            _, vjp = jax.vjp(lambda c, sc: base.decode(owned, c, sc), cb_, w0_)
+            gcb, gw0 = vjp(ghat)
+            return jax.lax.psum(gcb, axis), jax.lax.psum(gw0, axis)
+
+        gcb, gw0 = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None),) + plan_specs
+            + (P(None, None), P(None, None, None), P(None)),
+            out_specs=(P(None, None, None), P(None)), check_vma=False)(
+                codes, req_rows, owned_src, ret_idx, g, cb, w0)
+        return None, None, None, None, gcb, gw0   # ints: no gradient
+
+    decode.defvjp(fwd, bwd)
+    return decode(codes, plan.req_rows, plan.owned_src, plan.ret_idx,
+                  codebooks, w0)
+
+
+class OwnerBackend(DecodeBackend):
+    """Owner-computes cross-shard frontier decode (ISSUE 5).
+
+    The ``sharded`` backend decodes each shard's frontier block locally, so
+    a hub node appearing in k shards' frontiers is decoded k times.  This
+    backend hash-partitions rows by ``owner = node_id % n_shards``: each
+    shard ``all_to_all``s its requests to the owning shard, the owner
+    decodes every distinct id it owns exactly **once** (the cross-shard
+    dedup), and a second ``all_to_all`` returns the embeddings.  The
+    routing (a static-capacity ``OwnerPlan``) is built host-side in the
+    batch source's prefetch thread, so the jitted step sees fixed shapes.
+
+    Without a plan — or without a multi-device mesh, or when the plan's
+    shard count doesn't match the mesh — the call degrades to the
+    row-partitioned ``sharded`` decode of the same base backend (identical
+    values, no dedup), so a ``lookup_impl="owner"`` config runs
+    single-device tests unchanged and overflown plans fall back loudly
+    upstream without ever truncating rows.
+    """
+
+    name = "owner"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+
+    def __init__(self, base: Optional[object] = None, axis: Optional[str] = None,
+                 mesh=None, interpret: bool = False):
+        if base is None:
+            base = "pallas" if jax.default_backend() == "tpu" else "onehot"
+        _check_collective_base("owner", base)
+        self.base = get_backend(base, interpret=interpret)
+        self.axis = axis
+        self.mesh = mesh
+        self.preferred_pad = self.base.preferred_pad
+        # plan-less fallback: the row-partitioned sharded decode (values are
+        # identical — rows just decode once per holding shard, not per owner)
+        self._fallback = ShardedBackend(self.base, axis=axis, mesh=mesh)
+
+    def decode(self, codes, codebooks, w0=None):
+        return self._fallback.decode(codes, codebooks, w0)
+
+    def decode_frontier(self, codes, codebooks, w0=None, *, plan=None):
+        mesh, axis = _active_mesh_axis(self.mesh, self.axis)
+        k = mesh.shape[axis] if mesh is not None else 1
+        if plan is None or k <= 1:
+            return self.decode(codes, codebooks, w0)
+        n = int(plan.req_rows.shape[0])
+        if n != k or codes.shape[0] % n:
+            _warn_once(
+                f"owner-plan-mismatch-{n}-{k}-{codes.shape[0]}",
+                f"owner decode: plan built for {n} shards / "
+                f"{codes.shape[0]} rows does not match the {k}-way mesh; "
+                f"falling back to the row-partitioned sharded decode")
+            return self.decode(codes, codebooks, w0)
+        if w0 is None:
+            # same trick as ShardedBackend: one shard_map signature, and
+            # multiplying by exactly 1.0 is a bitwise no-op
+            w0 = jnp.ones((codebooks.shape[2],), jnp.float32)
+        return _owner_decode(self.base, mesh, axis, codes, codebooks, w0, plan)
+
+
+# ---------------------------------------------------------------------------
 # registry / selection
 # ---------------------------------------------------------------------------
 
@@ -317,46 +500,62 @@ register_backend("gather", GatherBackend)
 register_backend("onehot", OnehotBackend)
 register_backend("pallas", PallasBackend)
 register_backend("sharded", ShardedBackend)
+register_backend("owner", OwnerBackend)
+
+# ``auto`` prefers the owner-computes decode over the plain sharded decode
+# when the workload's measured duplication (frontier_rows / unique_rows, the
+# per-device decode work over the mean per-shard unique count — what
+# BENCH_shard.json reports) exceeds this: past 2x, the owner exchange
+# reclaims more decode rows than its two all_to_alls cost, and the default
+# owner_unique_cap = cap/2 sizing (graph.sampler.default_owner_caps) is
+# guaranteed adequate in expectation by the same inequality.
+OWNER_DUP_THRESHOLD = 2.0
 
 
 def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def resolve_auto() -> str:
-    """``auto`` resolution: the sharded decode when tracing under a mesh
-    whose data axis is actually split, else the fused kernel on TPU runtimes
-    and the MXU-friendly XLA formulation everywhere else."""
+def resolve_auto(duplication: Optional[float] = None) -> str:
+    """``auto`` resolution: under a mesh whose data axis is actually split,
+    the owner-computes decode when the measured frontier duplication
+    justifies the exchange (``duplication > OWNER_DUP_THRESHOLD``) and the
+    plain sharded decode otherwise; single-device, the fused kernel on TPU
+    runtimes and the MXU-friendly XLA formulation everywhere else."""
     from repro.parallel.sharding import data_axis_size
     if data_axis_size() > 1:
+        if duplication is not None and duplication > OWNER_DUP_THRESHOLD:
+            return "owner"
         return "sharded"
     return "pallas" if jax.default_backend() == "tpu" else "onehot"
 
 
-def get_backend(spec, *, interpret: bool = False) -> DecodeBackend:
+def get_backend(spec, *, interpret: bool = False,
+                duplication: Optional[float] = None) -> DecodeBackend:
     """Resolve a backend from a config string (or pass an instance through).
 
-    ``auto`` picks the sharded decode under a multi-device mesh, the fused
-    kernel on TPU runtimes and the MXU-friendly XLA formulation elsewhere.
-    ``sharded`` accepts an optional base-backend suffix — ``"sharded:gather"``
-    decodes shard-local through the gather oracle (bitwise-stable row
-    accumulation).  ``interpret`` affects ``pallas`` (directly or as a
-    sharded base)."""
+    ``auto`` picks a collective decode under a multi-device mesh (``owner``
+    when the measured ``duplication`` beats ``OWNER_DUP_THRESHOLD``, else
+    ``sharded``), the fused kernel on TPU runtimes and the MXU-friendly XLA
+    formulation elsewhere.  ``sharded`` / ``owner`` accept an optional
+    base-backend suffix — ``"owner:gather"`` decodes owner-local through the
+    gather oracle (bitwise-stable row accumulation).  ``interpret`` affects
+    ``pallas`` (directly or as a collective base)."""
     if isinstance(spec, DecodeBackend):
         return spec
     name = spec or "auto"
     if name == "auto":
-        name = resolve_auto()
+        name = resolve_auto(duplication)
     name, _, option = name.partition(":")
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown decode backend {name!r}; known: {available_backends()}")
-    if name == "sharded":
+    if name in ("sharded", "owner"):
         return _REGISTRY[name](base=option or None, interpret=interpret)
     if option:
         raise ValueError(
             f"decode backend {name!r} takes no ':{option}' option "
-            f"(only 'sharded:<base>' does)")
+            f"(only 'sharded:<base>' / 'owner:<base>' do)")
     if name == "pallas":
         return _REGISTRY[name](interpret=interpret)
     return _REGISTRY[name]()

@@ -92,12 +92,16 @@ def apply_decoder(
     *,
     interpret: bool = False,
     backend: Optional[DecodeBackend] = None,
+    plan=None,
 ) -> Array:
     """codes (..., m) int32 -> embeddings (..., d_e).
 
     ``backend`` overrides the config's ``lookup_impl`` (call-sites that hold
     a resolved backend — the graph engine, benchmarks — pass it straight
-    through instead of re-resolving per call)."""
+    through instead of re-resolving per call).  ``plan`` is an optional
+    ``graph.sampler.OwnerPlan`` for the owner-computes cross-shard decode;
+    backends that can't exploit it ignore it (decoding every row is always
+    correct)."""
     lead = codes.shape[:-1]
     codes2d = codes.reshape(-1, cfg.m)
     dtype = jnp.dtype(cfg.compute_dtype)
@@ -108,7 +112,10 @@ def apply_decoder(
 
     be = backend if backend is not None else get_backend(
         cfg.lookup_impl, interpret=interpret)
-    h = be.decode(codes2d, cb, w0).astype(dtype)
+    if plan is not None and hasattr(be, "decode_frontier"):
+        h = be.decode_frontier(codes2d, cb, w0, plan=plan).astype(dtype)
+    else:
+        h = be.decode(codes2d, cb, w0).astype(dtype)
 
     mlp = params["mlp"]
     for i in range(cfg.n_layers):

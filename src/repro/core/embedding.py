@@ -117,16 +117,19 @@ def embed_lookup(
     *,
     interpret: bool = False,
     backend=None,
+    plan=None,
 ) -> Array:
     """ids (...,) int32 -> embeddings (..., d_e).  ``backend`` is an optional
-    resolved ``DecodeBackend`` overriding ``cfg.lookup_impl``."""
+    resolved ``DecodeBackend`` overriding ``cfg.lookup_impl``; ``plan`` an
+    optional ``graph.sampler.OwnerPlan`` for the owner-computes cross-shard
+    decode (only meaningful for flat frontier ids on a collective backend)."""
     if cfg.kind == "dense":
         table = params["table"].astype(jnp.dtype(cfg.compute_dtype))
         return table[ids]
     packed = jnp.take(params["codes_buf"], ids, axis=0)       # (..., n_words)
     codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)      # (..., m)
     return apply_decoder(params["decoder"], codes, cfg.decoder_config(),
-                         interpret=interpret, backend=backend)
+                         interpret=interpret, backend=backend, plan=plan)
 
 
 def decode_all(params: nn.Params, cfg: EmbeddingConfig, block: int = 8192) -> Array:

@@ -85,15 +85,20 @@ class GNNModel:
     The embedding decode goes through the ``DecodeBackend`` selected by the
     config's ``lookup_impl`` (resolved once here, not per trace);
     ``interpret=True`` runs the pallas backend in interpret mode (CPU CI).
+    ``duplication`` is the measured frontier duplication hint ``auto``
+    backend selection uses to prefer the owner-computes decode over the
+    plain sharded one (``core.backend.resolve_auto``).
     ``apply_cached(params, batch, cache_state)`` is the hot-node-cache twin
     for the frontier path — it returns ``(hidden, new_cache_state)``.
     """
 
-    def __init__(self, cfg: GNNConfig, interpret: bool = False):
+    def __init__(self, cfg: GNNConfig, interpret: bool = False,
+                 duplication: Optional[float] = None):
         from repro.core.backend import get_backend
         self.cfg = cfg
         self.backend = get_backend(cfg.embedding.lookup_impl,
-                                   interpret=interpret)
+                                   interpret=interpret,
+                                   duplication=duplication)
 
     def init(self, key, codes=None, aux=None):
         return gnn.init_gnn(key, self.cfg, codes=codes, aux=aux)
@@ -260,11 +265,26 @@ class ShardedSageBatchSource:
     ``SageBatchSource(shard=s)``; this class is the single-process stand-in
     that drives all shards for tests, benchmarks and the forced-host-device
     CI leg.
+
+    ``owner_plan`` attaches a host-built ``OwnerPlan`` to every batch (in
+    the prefetch thread, alongside the sampling) so the ``"owner"`` decode
+    backend can dedup hub rows across shards: ``True`` always plans,
+    ``"auto"`` measures the step-0 duplication
+    (``frontier_rows / unique_rows``) and plans only when it beats
+    ``core.backend.OWNER_DUP_THRESHOLD`` — the same rule ``auto`` backend
+    selection applies, so plan and backend stay in sync.  A batch whose
+    buckets overflow the static ``owner_cap`` / ``owner_unique_cap``
+    capacities is emitted WITHOUT a plan after a loud warning (the owner
+    backend then falls back to the sharded row-partition decode) — rows are
+    never silently truncated.
     """
 
     def __init__(self, sampler: NeighborSampler, nodes, labels,
                  batch_size: int, n_shards: int, seed: int = 0,
-                 pad_to: int = 256, frontier_cap: Optional[int] = None):
+                 pad_to: int = 256, frontier_cap: Optional[int] = None,
+                 owner_plan: Union[bool, str] = False,
+                 owner_cap: Optional[int] = None,
+                 owner_unique_cap: Optional[int] = None):
         if frontier_cap is None:
             frontier_cap = default_frontier_cap(
                 batch_size, sampler.fanouts, pad_to, sampler.table.shape[0])
@@ -277,9 +297,50 @@ class ShardedSageBatchSource:
                             frontier_cap=self.frontier_cap)
             for s in range(self.n_shards)
         ]
+        self._peek = None   # (step, parts) cache so a peek isn't resampled
+        self.duplication_measured: Optional[float] = None
+        if owner_plan == "auto":
+            from repro.core.backend import OWNER_DUP_THRESHOLD
+            self.duplication_measured = self.measure_duplication()
+            owner_plan = self.duplication_measured > OWNER_DUP_THRESHOLD
+        self.owner_plan = bool(owner_plan)
+        from repro.graph.sampler import default_owner_caps
+        oc, ou = default_owner_caps(self.frontier_cap, self.n_shards)
+        for name, cap_ in (("owner_cap", owner_cap),
+                           ("owner_unique_cap", owner_unique_cap)):
+            if cap_ is not None and int(cap_) <= 0:
+                raise ValueError(f"{name} must be positive, got {cap_} "
+                                 f"(None = sized from frontier_cap)")
+        self.owner_cap = oc if owner_cap is None else int(owner_cap)
+        self.owner_unique_cap = (ou if owner_unique_cap is None
+                                 else int(owner_unique_cap))
+
+    def measure_duplication(self) -> float:
+        """Measured decode duplication of the upcoming batch:
+        ``frontier_rows / unique_rows`` per device — the per-device decode
+        work (``frontier_cap``, padding included) over the mean per-shard
+        unique count; exactly the ratio ``BENCH_shard.json`` reports and
+        the factor the owner decode can reclaim.  Peeks without consuming
+        (shard steps are restored, and the sampled parts are cached so the
+        next ``next_batch`` at the same step reuses instead of resampling),
+        so resume stays exact and the step-0 sampling cost is paid once."""
+        step0 = self.shards[0].step
+        parts = [s.next_batch() for s in self.shards]
+        for s in self.shards:
+            s.step = step0
+        self._peek = (step0, parts)
+        total_unique = sum(int(p["frontier"].n_unique) for p in parts)
+        return self.frontier_cap * self.n_shards / max(total_unique, 1)
 
     def next_batch(self) -> Dict[str, Any]:
-        parts = [s.next_batch() for s in self.shards]
+        from repro.graph.sampler import build_owner_plan
+        if self._peek is not None and self._peek[0] == self.shards[0].step:
+            parts = self._peek[1]
+            for s in self.shards:       # advance as next_batch would have
+                s.step += 1
+        else:
+            parts = [s.next_batch() for s in self.shards]
+        self._peek = None
         cap = self.frontier_cap
         fbs = [p["frontier"] for p in parts]
         unique = np.concatenate([np.asarray(fb.unique) for fb in fbs])
@@ -292,7 +353,24 @@ class ShardedSageBatchSource:
             np.arange(cap, dtype=np.int32) < int(fb.n_unique) for fb in fbs])
         n_unique = np.int32(sum(int(fb.n_unique) for fb in fbs))
         labels = np.concatenate([p["labels"] for p in parts])
-        return {"frontier": FrontierBatch(unique, maps, n_unique, valid),
+        plan = None
+        if self.owner_plan:
+            plan = build_owner_plan(
+                [np.asarray(fb.unique) for fb in fbs],
+                [int(fb.n_unique) for fb in fbs],
+                self.n_shards, self.owner_cap, self.owner_unique_cap)
+            if plan is None:
+                import warnings
+                warnings.warn(
+                    f"owner plan overflow: a (requester, owner) bucket "
+                    f"exceeded owner_cap={self.owner_cap} or an owner's "
+                    f"unique set exceeded owner_unique_cap="
+                    f"{self.owner_unique_cap}; emitting the batch without a "
+                    f"plan (decode falls back to the sharded row partition "
+                    f"— correct, but no cross-shard dedup).  Raise the caps "
+                    f"(RuntimeSpec.owner_cap / owner_unique_cap) if this "
+                    f"recurs.", stacklevel=2)
+        return {"frontier": FrontierBatch(unique, maps, n_unique, valid, plan),
                 "labels": labels}
 
     # -- checkpointable state -------------------------------------------

@@ -99,9 +99,18 @@ class RuntimeSpec:
                               ``ShardedSageBatchSource`` + data-axis mesh +
                               per-shard frontier placement.
       ``model.embedding.lookup_impl``   decode backend (gather / onehot /
-                              pallas / sharded[:base] / auto).
+                              pallas / sharded[:base] / owner[:base] /
+                              auto).  ``owner[:base]`` turns on the
+                              owner-computes cross-shard dedup decode: the
+                              sharded batch source plans the exchange
+                              host-side and hub rows decode once on their
+                              owning shard; ``auto`` picks it when the
+                              measured duplication beats the threshold.
       ``model.embedding.cache_capacity``/``cache_staleness``  hot-node
                               decode cache in the train state.
+      ``owner_cap``/``owner_unique_cap``  static owner-exchange capacities
+                              (None = sized from ``frontier_cap``, see
+                              ``graph.sampler.default_owner_caps``).
       ``prefetch_depth``      0 = synchronous sampling, >0 = async
                               double-buffered host→device pipeline.
     """
@@ -119,6 +128,8 @@ class RuntimeSpec:
     dedup: bool = True
     prefetch_depth: int = 2
     n_shards: int = 1
+    owner_cap: Optional[int] = None         # owner-exchange request slots
+    owner_unique_cap: Optional[int] = None  # owner-exchange decode rows
     # -- init / splits --
     init_seed: int = 0
     split_seed: int = 0
@@ -304,11 +315,20 @@ class GraphRuntime:
                     raise ValueError(
                         f"batch_size {spec.batch_size} not divisible by "
                         f"n_shards {spec.n_shards}")
+                # owner-computes decode: the batch source plans the exchange
+                # host-side whenever the backend can exploit it — always for
+                # an explicit "owner[:base]" impl, measured-duplication-gated
+                # for "auto" (the same threshold resolve_auto applies)
+                impl = (cfg.embedding.lookup_impl or "auto").split(":")[0]
+                owner_plan = (True if impl == "owner"
+                              else ("auto" if impl == "auto" else False))
                 self.source = ShardedSageBatchSource(
                     self.sampler, tr, self.labels,
                     spec.batch_size // spec.n_shards,
                     n_shards=spec.n_shards, seed=spec.data_seed,
-                    pad_to=spec.pad_to, frontier_cap=spec.frontier_cap)
+                    pad_to=spec.pad_to, frontier_cap=spec.frontier_cap,
+                    owner_plan=owner_plan, owner_cap=spec.owner_cap,
+                    owner_unique_cap=spec.owner_unique_cap)
             else:
                 self.source = SageBatchSource(
                     self.sampler, tr, self.labels, spec.batch_size,
@@ -329,7 +349,8 @@ class GraphRuntime:
 
         # -- step + checkpointing ------------------------------------------
         self.train_step = make_gnn_train_step(
-            cfg, spec.optimizer, interpret=self.interpret, mesh=self.mesh)
+            cfg, spec.optimizer, interpret=self.interpret, mesh=self.mesh,
+            duplication=getattr(self.source, "duplication_measured", None))
         self._jitted_step = None
         self.ckpt = None
         if spec.ckpt_dir:

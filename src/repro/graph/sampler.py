@@ -70,6 +70,138 @@ def stream_key(seed: int, step: int) -> np.uint64:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
+class OwnerPlan:
+    """Host-built routing plan for the owner-computes cross-shard decode
+    (``lookup_impl="owner"``, see ``core.backend.OwnerBackend``).
+
+    Frontier rows are hash-partitioned by ``owner = node_id % n_shards``;
+    every array below is **stacked along the shard axis** (leading dim
+    ``n_shards``) so the same data-axis placement that shards the frontier
+    rows puts each shard's slice of the plan on its device.  All shapes are
+    static (``owner_cap`` request slots per (requester, owner) pair,
+    ``owner_unique_cap`` decode rows per owner), so jit sees one shape per
+    source configuration no matter how the per-step buckets fill.
+
+    ``req_rows``   (n, n, owner_cap) int32 — [requester s][owner o][slot] =
+                   row index into s's local ``cap`` frontier block, or the
+                   sentinel ``cap`` for unused slots (dropped on scatter).
+    ``owned_src``  (n, owner_unique_cap) int32 — [owner o][j] = position in
+                   o's received flat (n·owner_cap,) request buffer of the
+                   representative occurrence of its j-th owned-unique id
+                   (0-padded past ``n_owned[o]``).
+    ``ret_idx``    (n, n, owner_cap) int32 — [owner o][requester s][slot] =
+                   index into o's decoded (owner_unique_cap,) rows answering
+                   that request slot (0-padded).
+    ``n_owned``    (n,) int32 — true owned-unique count per owner: the rows
+                   each device actually decodes (the dedup accounting the
+                   benchmarks report as ``rows_decoded_per_device``).
+    """
+
+    req_rows: np.ndarray
+    owned_src: np.ndarray
+    ret_idx: np.ndarray
+    n_owned: np.ndarray
+
+    def tree_flatten(self):
+        return (self.req_rows, self.owned_src, self.ret_idx,
+                self.n_owned), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def n_shards(self) -> int:
+        return self.req_rows.shape[0]
+
+    @property
+    def owner_cap(self) -> int:
+        return self.req_rows.shape[2]
+
+    @property
+    def owner_unique_cap(self) -> int:
+        return self.owned_src.shape[1]
+
+
+# Default safety factor for the per-(requester, owner) request buckets: a
+# bucket's expected fill is n_unique_s / n_shards ≤ cap / n_shards, so the
+# 1.25 headroom absorbs hash skew across the id residue classes (asserted
+# never to overflow on splitmix64-drawn frontiers in tests/test_sharded.py).
+OWNER_SAFETY = 1.25
+
+
+def default_owner_caps(cap: int, n_shards: int,
+                       safety: float = OWNER_SAFETY) -> Tuple[int, int]:
+    """Static capacities ``(owner_cap, owner_unique_cap)`` for the owner
+    exchange, sized from the per-shard frontier ``cap``.
+
+    ``owner_cap`` (request slots per (requester, owner) pair) is the
+    expected bucket fill ``cap / n_shards`` with ``safety`` headroom.
+    ``owner_unique_cap`` (decode rows per owner) is ``cap / 2``: the owner
+    decode is only selected when measured duplication
+    ``frontier_rows / unique_rows`` exceeds ``OWNER_DUP_THRESHOLD`` (= 2, see
+    ``core.backend``), and duplication > 2 *implies* per-owner unique
+    ``global_unique / n ≤ (Σ_s n_unique_s) / n < cap / 2`` — the capacity
+    rule and the selection threshold are the same inequality.  Both are
+    rounded up to the sublane multiple (8); overflow at runtime falls back
+    loudly (``build_owner_plan`` returns None), never truncates."""
+    def up8(x: int) -> int:
+        return -(-int(x) // 8) * 8
+    oc = min(up8(-(-cap * safety // n_shards)), cap)
+    ou = min(up8(-(-cap // 2)), n_shards * oc)
+    return int(oc), int(ou)
+
+
+def build_owner_plan(uniques: Sequence[np.ndarray], n_uniques: Sequence[int],
+                     n_shards: int, owner_cap: int,
+                     owner_unique_cap: int) -> Optional[OwnerPlan]:
+    """Build the owner-computes exchange plan for one stacked frontier.
+
+    ``uniques``: the n_shards per-shard frontier blocks (each (cap,) int32,
+    valid prefix of length ``n_uniques[s]``).  Rows are bucketed by
+    ``id % n_shards``; each owner dedups the requests it receives across all
+    requesters so every distinct owned id is decoded exactly once.  Returns
+    ``None`` when any (requester, owner) bucket exceeds ``owner_cap`` or any
+    owner's unique set exceeds ``owner_unique_cap`` — the caller must fall
+    back loudly (emit the batch without a plan), NEVER truncate: a dropped
+    row would silently decode to zeros."""
+    n = int(n_shards)
+    cap = int(np.asarray(uniques[0]).shape[0])
+    req_rows = np.full((n, n, owner_cap), cap, np.int32)
+    requests = [[None] * n for _ in range(n)]
+    for s in range(n):
+        ids = np.asarray(uniques[s])[:int(n_uniques[s])]
+        own = ids % n
+        for o in range(n):
+            rows = np.nonzero(own == o)[0]
+            if rows.shape[0] > owner_cap:
+                return None                     # bucket overflow: loud fallback
+            req_rows[s, o, :rows.shape[0]] = rows
+            requests[s][o] = ids[rows]
+    owned_src = np.zeros((n, owner_unique_cap), np.int32)
+    ret_idx = np.zeros((n, n, owner_cap), np.int32)
+    n_owned = np.zeros((n,), np.int32)
+    for o in range(n):
+        # owner o's received buffer: requester s's segment at offset s*owner_cap
+        flat = np.full((n * owner_cap,), -1, np.int64)
+        for s in range(n):
+            k = requests[s][o].shape[0]
+            flat[s * owner_cap:s * owner_cap + k] = requests[s][o]
+        pos = np.nonzero(flat >= 0)[0]
+        uniq, first, inv = np.unique(flat[pos], return_index=True,
+                                     return_inverse=True)
+        if uniq.shape[0] > owner_unique_cap:
+            return None                         # owned overflow: loud fallback
+        owned_src[o, :uniq.shape[0]] = pos[first]
+        n_owned[o] = uniq.shape[0]
+        ridx = np.zeros((n * owner_cap,), np.int32)
+        ridx[pos] = inv.astype(np.int32)
+        ret_idx[o] = ridx.reshape(n, owner_cap)
+    return OwnerPlan(req_rows, owned_src, ret_idx, n_owned)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
 class FrontierBatch:
     """Deduplicated sampled minibatch.
 
@@ -85,25 +217,38 @@ class FrontierBatch:
                    ``arange(U_pad) < n_unique``; sharded *stacked* batches
                    (``ShardedSageBatchSource``) carry per-shard segments
                    whose padding is interleaved, so they set it explicitly.
+    ``plan``       optional ``OwnerPlan`` — host-built routing for the
+                   owner-computes cross-shard decode; only stacked sharded
+                   batches whose source enables it carry one.  Padding rows
+                   of a planned batch are decoded to zeros instead of
+                   duplicate embeddings (no index map points at them).
     """
 
     unique: np.ndarray
     index_maps: Tuple[np.ndarray, ...]
     n_unique: np.ndarray
     valid: Optional[np.ndarray] = None
+    plan: Optional[OwnerPlan] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         leaves = (self.unique, self.n_unique) + tuple(self.index_maps)
+        aux = (len(self.index_maps), self.valid is not None,
+               self.plan is not None)
         if self.valid is not None:
-            return leaves + (self.valid,), True
-        return leaves, False
+            leaves = leaves + (self.valid,)
+        if self.plan is not None:
+            leaves = leaves + (self.plan,)
+        return leaves, aux
 
     @classmethod
-    def tree_unflatten(cls, has_valid, leaves):
-        if has_valid:
-            return cls(leaves[0], tuple(leaves[2:-1]), leaves[1], leaves[-1])
-        return cls(leaves[0], tuple(leaves[2:]), leaves[1])
+    def tree_unflatten(cls, aux, leaves):
+        n_maps, has_valid, has_plan = aux
+        maps = tuple(leaves[2:2 + n_maps])
+        rest = list(leaves[2 + n_maps:])
+        valid = rest.pop(0) if has_valid else None
+        plan = rest.pop(0) if has_plan else None
+        return cls(leaves[0], maps, leaves[1], valid, plan)
 
     # -- construction ----------------------------------------------------
     @classmethod

@@ -117,7 +117,7 @@ def sage_forward_frontier(params, fb: FrontierBatch, cfg: GNNConfig,
     ecfg = cfg.embedding_config()
     ids = sharding.logical(fb.unique, "frontier")
     hu = emb_lib.embed_lookup(params["embed"], ids, ecfg,
-                              backend=backend)                      # (U, de)
+                              backend=backend, plan=fb.plan)        # (U, de)
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]                                       # (B, de)
     h1 = hu[fb.index_maps[1]]                                       # (B, f1, de)
@@ -144,10 +144,12 @@ def sage_forward_frontier_cached(params, fb: FrontierBatch, cfg: GNNConfig,
     # stacked frontiers carry an explicit mask: padding is per shard block,
     # not a global suffix)
     valid = fb.valid_mask()
+    # the cache lookup wraps the whole owner exchange: decode_fn sees the
+    # full (unpermuted) frontier ids, so the batch's OwnerPlan stays valid
     hu, new_state = cache.lookup(
         cache_state, ids,
         lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,
-                                       backend=backend),
+                                       backend=backend, plan=fb.plan),
         valid=valid)
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]

@@ -277,11 +277,15 @@ def frontier_batch_shardings(batch, mesh: Mesh, axis: Optional[str] = None):
 
     def fn(v):
         if isinstance(v, FrontierBatch):
+            # OwnerPlan leaves are stacked along the shard axis (leading dim
+            # n_shards), so each shard's slice of the routing lands with its
+            # frontier rows
             return FrontierBatch(
                 unique=rows(v.unique),
                 index_maps=tuple(rep for _ in v.index_maps),
                 n_unique=rep,
-                valid=None if v.valid is None else rows(v.valid))
+                valid=None if v.valid is None else rows(v.valid),
+                plan=None if v.plan is None else jax.tree.map(rows, v.plan))
         return jax.tree.map(lambda _: rep, v)
 
     return {key: fn(v) for key, v in batch.items()}

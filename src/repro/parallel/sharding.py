@@ -177,6 +177,16 @@ def data_axis_size(mesh: Optional[Mesh] = None) -> int:
     return mesh.shape[data_axis(mesh)]
 
 
+def all_to_all(x, axis: str, split_axis: int = 0, concat_axis: int = 0):
+    """Tiled ``all_to_all`` over a named mesh axis (inside ``shard_map``):
+    splits ``x``'s ``split_axis`` into one block per shard, sends block *j*
+    to shard *j*, and concatenates the received blocks in shard order along
+    ``concat_axis`` — the owner-computes exchange primitive (requests out,
+    embeddings back).  Route new collective code through this spelling, not
+    raw ``jax.lax`` (same policy as ``shard_map``/``make_mesh`` above)."""
+    return jax.lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True)
+
+
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     # jax.sharding.AxisType landed after 0.4.x; older versions default to
     # auto axes, which is exactly what we ask for on newer ones.

@@ -126,7 +126,8 @@ def init_gnn_train_state(key, cfg: GNNConfig, codes=None, aux=None) -> Dict[str,
 def make_gnn_train_step(cfg: GNNConfig,
                         opt: Optional[AdamWConfig] = None,
                         interpret: bool = False,
-                        mesh=None) -> Callable:
+                        mesh=None,
+                        duplication: Optional[float] = None) -> Callable:
     """Node-classification train step over the unified ``GNNModel`` API.
 
     The batch is a dict from an engine batch source: either
@@ -148,7 +149,11 @@ def make_gnn_train_step(cfg: GNNConfig,
     ``lookup_impl="sharded"`` (or ``"auto"``) the frontier decode of a
     ``ShardedSageBatchSource`` batch runs shard-local on the mesh's data
     axis — the whole N-shard switch is this argument plus the batch source's
-    ``n_shards``.
+    ``n_shards``.  ``duplication`` (measured frontier_rows/unique_rows, from
+    ``ShardedSageBatchSource.measure_duplication``) lets ``lookup_impl=
+    "auto"`` prefer the owner-computes decode past the duplication
+    threshold; batches carrying an ``OwnerPlan`` then dedup hub rows across
+    shards.
     """
     from contextlib import nullcontext
 
@@ -158,7 +163,7 @@ def make_gnn_train_step(cfg: GNNConfig,
     from repro.parallel.sharding import use_sharding
     _ctx = (lambda: use_sharding(mesh)) if mesh is not None else nullcontext
     with _ctx():
-        model = GNNModel(cfg, interpret=interpret)
+        model = GNNModel(cfg, interpret=interpret, duplication=duplication)
     ocfg = opt or AdamWConfig(lr=1e-2, weight_decay=0.0)
 
     def train_step(state, batch):

@@ -11,6 +11,7 @@ the ``multidevice`` marker and skip — never error — below 2 devices (the
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -272,12 +273,13 @@ def test_sharded_decode_pads_unaligned_batch():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
-def _run_stream(graph, codes, cfg, n_shards, mesh, steps=3, seed=0):
+def _run_stream(graph, codes, cfg, n_shards, mesh, steps=3, seed=0,
+                owner=False):
     adj, labels = graph
     sampler = NeighborSampler(adj, cfg.fanouts, max_deg=32, seed=0)
     src = ShardedSageBatchSource(sampler, np.arange(N), labels,
                                  BATCH // n_shards, n_shards=n_shards,
-                                 seed=seed, pad_to=64)
+                                 seed=seed, pad_to=64, owner_plan=owner)
     place = make_frontier_placement(mesh) if mesh is not None else None
     state = init_gnn_train_state(KEY, cfg, codes=codes)
     it = PrefetchIterator(src, depth=2, device=place)
@@ -302,6 +304,252 @@ def test_4shard_run_loss_bit_identical_to_1shard(graph, codes):
     assert l1[0] == l4[0], f"step-0 loss diverged: {l1[0]} vs {l4[0]}"
     # later steps may only drift by f32 accumulation (grad psum order)
     assert max(abs(a - b) for a, b in zip(l1, l4)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# owner-computes decode (ISSUE 5): plan, backend, end-to-end, property
+# ---------------------------------------------------------------------------
+
+def _owner_source(graph, n_shards=N_SHARDS, seed=7, owner_plan=True, **kw):
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    return ShardedSageBatchSource(sampler, np.arange(N), labels,
+                                  BATCH // n_shards, n_shards=n_shards,
+                                  seed=seed, pad_to=64, owner_plan=owner_plan,
+                                  **kw)
+
+
+def test_owner_backend_registry_and_fallback():
+    assert "owner" in backend_mod.available_backends()
+    be = backend_mod.get_backend("owner:gather")
+    assert be.base.name == "gather"
+    with pytest.raises(ValueError, match="wrap itself"):
+        backend_mod.get_backend("owner:owner")
+    with pytest.raises(ValueError, match="wrap itself"):
+        backend_mod.get_backend("owner:sharded")
+    with pytest.raises(ValueError, match="wrap itself"):
+        backend_mod.get_backend("sharded:owner")
+
+    # no mesh -> bitwise the base backend, with or without a plan
+    key = jax.random.PRNGKey(1)
+    codes = jax.random.randint(key, (32, 8), 0, 16)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 64))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (64,))
+    ref = backend_mod.get_backend("gather").decode(codes, cb, w0)
+    np.testing.assert_array_equal(np.asarray(be.decode(codes, cb, w0)),
+                                  np.asarray(ref))
+    np.testing.assert_array_equal(
+        np.asarray(be.decode_frontier(codes, cb, w0, plan=None)),
+        np.asarray(ref))
+
+
+def test_owner_plan_routes_every_valid_row_once(graph):
+    """Host-side contract of ``build_owner_plan``: simulating the exchange
+    in numpy with ids as payloads, every valid frontier row receives the id
+    it asked for, each owner's decode list is distinct ids ≡ owner (mod n),
+    and the total decoded rows equal the stacked frontier's global unique
+    count (the cross-shard dedup)."""
+    src = _owner_source(graph)
+    batch = src.next_batch()
+    fb = batch["frontier"]
+    plan = fb.plan
+    assert plan is not None
+    n, cap = src.n_shards, src.frontier_cap
+    unique = np.asarray(fb.unique).reshape(n, cap)
+    valid = np.asarray(fb.valid).reshape(n, cap)
+    n_uniques = [int(valid[s].sum()) for s in range(n)]
+
+    # owner o's decode list: distinct, owned by o
+    global_unique = np.unique(np.concatenate(
+        [unique[s, :n_uniques[s]] for s in range(n)]))
+    for o in range(n):
+        k = int(plan.n_owned[o])
+        recv = np.stack([unique[s][np.clip(plan.req_rows[s, o], 0, cap - 1)]
+                         for s in range(n)]).reshape(-1)
+        owned = recv[plan.owned_src[o, :k]]
+        assert len(np.unique(owned)) == k and (owned % n == o).all()
+    assert int(plan.n_owned.sum()) == global_unique.shape[0]
+    assert int(plan.n_owned.sum()) < sum(n_uniques)   # real cross-shard dedup
+
+    # full exchange simulation: payload = the id itself
+    out = np.full((n, cap), -1, np.int64)
+    for o in range(n):
+        recv = np.stack([unique[s][np.clip(plan.req_rows[s, o], 0, cap - 1)]
+                         for s in range(n)]).reshape(-1)
+        dec = recv[plan.owned_src[o]]                 # "decode" = identity
+        for s in range(n):
+            back = dec[plan.ret_idx[o, s]]            # (oc,)
+            rows = plan.req_rows[s, o]
+            ok = rows < cap
+            out[s, rows[ok]] = back[ok]
+    for s in range(n):
+        np.testing.assert_array_equal(out[s, :n_uniques[s]],
+                                      unique[s, :n_uniques[s]])
+
+
+def test_owner_plan_overflow_falls_back_loudly(graph):
+    """Caps too small for the workload: the source must warn and emit the
+    batch WITHOUT a plan (decode falls back), never truncate rows."""
+    src = _owner_source(graph, owner_cap=2, owner_unique_cap=8)
+    with pytest.warns(UserWarning, match="owner plan overflow"):
+        batch = src.next_batch()
+    fb = batch["frontier"]
+    assert fb.plan is None
+    # the batch itself is intact — the 1-shard reconstruction still holds
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    single = SageBatchSource(sampler, np.arange(N), labels, BATCH, seed=7)
+    g = single.next_batch()
+    for lvl, got in zip(g["frontier"].levels(), fb.levels()):
+        np.testing.assert_array_equal(np.asarray(lvl), np.asarray(got))
+
+
+def test_owner_spec_field_roundtrip():
+    """An owner-decode run is one RuntimeSpec field change, and the owner
+    knobs ride through JSON (checkpoint-resume safe)."""
+    import json
+
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    spec = RuntimeSpec(
+        graph=GraphSource(n_nodes=N, n_classes=8),
+        model=paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5),
+    ).with_updates(lookup_impl="owner:gather", n_shards=4,
+                   owner_cap=128, owner_unique_cap=256)
+    assert spec.model.embedding.lookup_impl == "owner:gather"
+    assert (spec.owner_cap, spec.owner_unique_cap) == (128, 256)
+    restored = RuntimeSpec.from_dict(json.loads(spec.to_json()))
+    assert restored == spec
+
+
+def test_owner_caps_default_sizing():
+    from repro.graph.sampler import default_owner_caps
+    # the BENCH_shard.json workload: cap·1.25/n request slots, cap/2 decode
+    # rows (the duplication-threshold inequality, both sublane-rounded)
+    assert default_owner_caps(7168, 4) == (2240, 3584)
+    # never exceed the trivially safe bounds (cap, n_shards·owner_cap)
+    oc, ou = default_owner_caps(16, 16)
+    assert oc <= 16 and ou <= 16 * oc
+
+
+def test_owner_hashed_frontiers_never_overflow_default_caps(graph):
+    """Property (ISSUE 5 satellite): frontiers drawn by the splitmix64
+    counter-based sampler never overflow the default capacities — every
+    (requester, owner) bucket fits the ``cap/n_shards`` expectation with the
+    default safety factor, every owner's unique set fits ``cap/2``, and the
+    plan therefore always builds (the loud fallback never fires in
+    practice)."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.graph.sampler import default_owner_caps
+    adj, labels = graph
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 1000))
+    def check(seed, step):
+        src = ShardedSageBatchSource(sampler, np.arange(N), labels,
+                                     BATCH // N_SHARDS, n_shards=N_SHARDS,
+                                     seed=seed, pad_to=64, owner_plan=True)
+        for sh in src.shards:
+            sh.step = step
+        batch = src.next_batch()
+        fb = batch["frontier"]
+        # no bucket or owned-unique overflow: the plan built (no fallback)
+        assert fb.plan is not None, (seed, step)
+        cap = src.frontier_cap
+        oc, _ = default_owner_caps(cap, N_SHARDS)
+        unique = np.asarray(fb.unique).reshape(N_SHARDS, cap)
+        valid = np.asarray(fb.valid).reshape(N_SHARDS, cap)
+        for s in range(N_SHARDS):
+            ids = unique[s][valid[s]]
+            counts = np.bincount(ids % N_SHARDS, minlength=N_SHARDS)
+            assert counts.max() <= oc, (seed, step, counts.max(), oc)
+
+    check()
+
+
+@pytest.mark.multidevice(n=4)
+def test_owner_decode_matches_gather_oracle(graph):
+    """Tentpole acceptance: forward through the owner exchange is bitwise
+    the gather oracle on every valid row (a row's decode is computed once,
+    on its owner, from the same code row); codebook/W0 grads match the
+    oracle within f32 tolerance (cotangents are scatter-added per owner and
+    the disjoint owner partials psummed in a different order)."""
+    mesh = _mesh(N_SHARDS)
+    src = _owner_source(graph)
+    fb = src.next_batch()["frontier"]
+    assert fb.plan is not None
+    key = jax.random.PRNGKey(0)
+    m, c, d_c = 8, 16, 128
+    ctable = jax.random.randint(key, (N, m), 0, c)
+    codes = jnp.asarray(np.asarray(ctable)[np.asarray(fb.unique)])
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (m, c, d_c))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (d_c,))
+    valid = np.asarray(fb.valid)
+    vm = jnp.asarray(valid)[:, None]
+
+    oracle = backend_mod.get_backend("gather")
+    ob = backend_mod.get_backend("owner:gather")
+    for scale in (w0, None):
+        ref = oracle.decode(codes, cb, scale)
+        with use_sharding(mesh):
+            out = jax.jit(lambda co, b, s: ob.decode_frontier(
+                co, b, s, plan=fb.plan))(codes, cb, scale)
+        np.testing.assert_array_equal(np.asarray(out)[valid],
+                                      np.asarray(ref)[valid])
+
+    def loss(fn):
+        return lambda cb_, w0_: ((fn(cb_, w0_) * vm) ** 2).sum()
+    with use_sharding(mesh):
+        g_own = jax.jit(jax.grad(
+            loss(lambda b, s: ob.decode_frontier(codes, b, s, plan=fb.plan)),
+            argnums=(0, 1)))(cb, w0)
+    g_ref = jax.grad(loss(lambda b, s: oracle.decode(codes, b, s)),
+                     argnums=(0, 1))(cb, w0)
+    for a, b in zip(g_own, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.multidevice(n=2)
+def test_auto_prefers_owner_past_duplication_threshold():
+    with use_sharding(_mesh(2)):
+        assert backend_mod.resolve_auto(duplication=3.0) == "owner"
+        assert backend_mod.resolve_auto(duplication=1.2) == "sharded"
+        assert backend_mod.resolve_auto() == "sharded"
+    assert backend_mod.resolve_auto(duplication=3.0) in ("onehot", "pallas")
+
+
+@pytest.mark.multidevice(n=4)
+def test_4shard_owner_run_loss_bit_identical_to_1shard(graph, codes):
+    """Acceptance (ISSUE 5): the owner-computes 4-shard streaming run's
+    step-0 forward loss is bit-identical to the 1-shard run — hub rows
+    decode once on their owner, from the same codes, through the same
+    gather-order accumulation."""
+    cfg_own = _cfg("owner:gather")
+    l1 = _run_stream(graph, codes, _cfg("sharded:gather"), 1, None)
+    l4 = _run_stream(graph, codes, cfg_own, N_SHARDS, _mesh(N_SHARDS),
+                     owner=True)
+    assert l1[0] == l4[0], f"step-0 loss diverged: {l1[0]} vs {l4[0]}"
+    assert max(abs(a - b) for a, b in zip(l1, l4)) < 1e-3
+
+
+@pytest.mark.multidevice(n=4)
+def test_owner_cached_staleness0_bit_exact(graph, codes):
+    """Satellite (ISSUE 5): CachedDecodeBackend over the owner exchange at
+    staleness 0 reproduces the uncached owner run exactly (the cache wraps
+    the whole exchange; every access re-decodes at staleness 0)."""
+    mesh = _mesh(N_SHARDS)
+    l_plain = _run_stream(graph, codes, _cfg("owner:gather"),
+                          N_SHARDS, mesh, steps=6, seed=7, owner=True)
+    l_cached = _run_stream(graph, codes,
+                           _cfg("owner:gather", cache_capacity=256,
+                                cache_staleness=0),
+                           N_SHARDS, mesh, steps=6, seed=7, owner=True)
+    assert l_plain == l_cached
 
 
 @pytest.mark.multidevice(n=4)

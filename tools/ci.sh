@@ -13,9 +13,12 @@
 #   tools/ci.sh --multidevice  import gate + the `multidevice`-marked tests
 #                              under XLA_FLAGS=--xla_force_host_platform_
 #                              device_count=8, so sharded code paths see 8
-#                              devices on a CPU-only container.  Runs ONLY
-#                              the marked tests: the tier-1 suite must keep
-#                              its single-device view (tests/conftest.py).
+#                              devices on a CPU-only container, plus an
+#                              owner-decode GraphRuntime smoke
+#                              (lookup_impl="owner:gather", 4 shards, 2
+#                              steps).  Runs ONLY the marked tests: the
+#                              tier-1 suite must keep its single-device view
+#                              (tests/conftest.py).
 #   tools/ci.sh --examples     import gate + examples smoke, WITHOUT the
 #                              tier-1 pytest: runs the GraphRuntime front
 #                              door end to end — `train_gnn_hash.py --steps
@@ -50,9 +53,36 @@ echo "== [1/2] import-health gate =="
 python tools/check_imports.py
 
 if [[ "$RUN_MULTI" == 1 ]]; then
-    echo "== [2/2] multidevice pytest (8 forced host devices) =="
+    echo "== [2/3] multidevice pytest (8 forced host devices) =="
     XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
         python -m pytest -q -m multidevice
+    echo "== [3/3] owner-decode runtime smoke (lookup_impl=owner:gather) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python - <<'PY'
+import math
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+
+# n_nodes=1000 + fanout 10 puts the workload firmly in the owner regime:
+# the frontier cap rounds to 1024, so owner_unique_cap=512 while any owner
+# can own at most 1000/4 = 250 distinct ids — the plan can never overflow
+spec = RuntimeSpec(
+    graph=GraphSource(kind="powerlaw", seed=0, n_nodes=1000, n_classes=8),
+    model=paper_gnn_config("sage", n_nodes=1000, n_classes=8, fanout=10),
+    batch_size=64, n_shards=4, total_steps=2, log_every=1,
+).with_updates(c=16, m=8, d_c=64, d_m=64, lookup_impl="owner:gather")
+rt = GraphRuntime.from_spec(spec)
+try:
+    batch = rt.data_iter.next_batch()
+    assert batch["frontier"].plan is not None, "owner plan missing"
+    res = rt.train(2)
+    assert all(math.isfinite(l) for l in res.losses), \
+        f"non-finite loss: {res.losses}"
+    print("owner-decode smoke OK:", res.losses)
+finally:
+    rt.close()
+PY
 elif [[ "$RUN_SUITE" == 1 ]]; then
     echo "== [2/2] tier-1 pytest =="
     python -m pytest -x -q
