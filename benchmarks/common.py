@@ -28,6 +28,25 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+BENCH_MODES = ("native", "interpret")
+
+
+def bench_entry(name: str, *, mode: str, dtype: str, **fields) -> dict:
+    """Canonical BENCH_*.json record.  Every entry MUST carry its execution
+    ``mode`` ("native" = the real backend, "interpret" = pallas interpret /
+    CPU semantics check — NOT a perf measurement) and the decode ``dtype``
+    ("float32" / "bfloat16" / "int8"), so a number can never be read
+    without the context that decides whether it means anything.  Writers
+    build entries through this helper; tools/ci.sh --bench asserts the keys
+    on the committed artifacts."""
+    if mode not in BENCH_MODES:
+        raise ValueError(f"bench entry {name!r}: mode must be one of "
+                         f"{BENCH_MODES}, got {mode!r}")
+    if not dtype or not isinstance(dtype, str):
+        raise ValueError(f"bench entry {name!r}: missing dtype")
+    return {"name": name, "mode": mode, "dtype": dtype, **fields}
+
+
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in microseconds (blocks on outputs)."""
     if SMOKE:

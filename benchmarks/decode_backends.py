@@ -34,7 +34,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from benchmarks.common import emit, steps, time_fn
+from benchmarks.common import bench_entry, emit, steps, time_fn
 from repro.configs.paper_gnn import paper_gnn_config
 from repro.core import backend as backend_mod
 from repro.core import embedding as emb_lib
@@ -103,9 +103,9 @@ def run():
              f"rows={rows} rows_decoded={rows} {note}")
         emit(f"decode_backends/{name}/fwd_bwd", t_bwd,
              f"rows={rows} rows_decoded={rows} {note}")
-        report["backends"][name] = {
-            "fwd_us": t_fwd, "fwd_bwd_us": t_bwd, "rows": rows,
-            "rows_decoded": rows, "mode": note}
+        report["backends"][name] = bench_entry(
+            name, mode=note, dtype=ecfg.compute_dtype,
+            fwd_us=t_fwd, fwd_bwd_us=t_bwd, rows=rows, rows_decoded=rows)
     rt.close()
 
     # ---- cached decode: training throughput + hit accounting ------------
@@ -126,8 +126,9 @@ def run():
                 t0 = _time.perf_counter()
         vrt.close()
         per_step = (_time.perf_counter() - t0) / max(n_steps - 1, 1) * 1e6
-        entry = {"step_us": per_step, "steps": n_steps,
-                 "final_loss": float(metrics["loss"])}
+        entry = bench_entry(label, mode="native", dtype=ecfg.compute_dtype,
+                            step_us=per_step, steps=n_steps,
+                            final_loss=float(metrics["loss"]))
         derived = f"final_loss={entry['final_loss']:.4f}"
         if "cache_hits" in metrics:
             hits = int(metrics["cache_hits"])
@@ -162,11 +163,13 @@ def run():
     per_req = (_time.perf_counter() - t0) / max(n_req - 1, 1) * 1e6
     stats = engine.stats()
     srt.close()
-    entry = {"request_us": per_req, "requests": n_req,
-             "rows_decoded_per_request": stats["rows_decoded"] / n_req,
-             "rows_per_request": stats["rows_total"] / n_req,
-             "hit_rate": stats.get("hit_rate", 0.0),
-             "last_request_rows_decoded": res.rows_decoded}
+    entry = bench_entry(
+        "cached_missonly", mode="native", dtype=ecfg.compute_dtype,
+        request_us=per_req, requests=n_req,
+        rows_decoded_per_request=stats["rows_decoded"] / n_req,
+        rows_per_request=stats["rows_total"] / n_req,
+        hit_rate=stats.get("hit_rate", 0.0),
+        last_request_rows_decoded=res.rows_decoded)
     emit("decode_backends/cached_missonly/request", per_req,
          f"rows_decoded={entry['rows_decoded_per_request']:.0f}"
          f"/{entry['rows_per_request']:.0f}"

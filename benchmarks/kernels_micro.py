@@ -1,27 +1,124 @@
-"""Kernel microbenchmarks.
+"""Kernel microbenchmarks + the fused hash-decode roofline datapoint.
 
 Wall-clock on this container is CPU (interpret-mode Pallas is a semantics
 check, not a perf number), so the honest comparison is:
   * XLA-path wall time of the decode/encode/attention ops on CPU (relative
     cost of onehot vs gather decode — the TPU adaptation argument), and
   * the roofline-derived TPU estimates from the dry-run artifacts.
+
+The fused hash-decode section (ISSUE 6) measures the kernel at every decode
+precision (f32 / bf16 codebooks / fused-int8) and writes
+``BENCH_kernels.json``: per-dtype modeled HBM bytes
+(``launch.roofline.decode_hbm_bytes``), the roofline step floor and the
+achieved-vs-roofline ratio for the measured wall time.  Every entry carries
+``mode`` ("native" on a TPU runtime, "interpret" here — in which case
+``achieved_vs_roofline`` documents interpreter overhead, not kernel
+efficiency) and ``dtype``, enforced by ``common.bench_entry``.  The run
+asserts the fused int8 forward matches f32 within the documented drift
+bound (``core.backend.DRIFT_BOUNDS``) and that int8 cuts codebook bytes by
+>= 3.5x — the acceptance bars, checked on every --bench CI leg.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks import common
+from benchmarks.common import bench_entry, emit, time_fn
 from repro.core.decoder import DecoderConfig, apply_decoder, init_decoder
 from repro.kernels.flash_attention.ref import mha_ref
 
 KEY = jax.random.PRNGKey(0)
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
+# Paper §5.3 decode shape (B is the padded unique-frontier row count)
+DECODE_SHAPE = dict(c=256, m=16, d_c=512)
+MIN_INT8_BYTE_REDUCTION = 3.5
+
+
+def _fused_decode_bench(report: dict) -> None:
+    from repro.core.backend import DRIFT_BOUNDS
+    from repro.kernels.hash_decode import ops as hd_ops
+    from repro.launch.roofline import decode_hbm_bytes, decode_roofline
+
+    c, m, d_c = DECODE_SHAPE["c"], DECODE_SHAPE["m"], DECODE_SHAPE["d_c"]
+    B = 1024 if common.SMOKE else 8192
+    interpret = jax.default_backend() != "tpu"
+    mode = "interpret" if interpret else "native"
+
+    codes = jax.random.randint(KEY, (B, m), 0, c, jnp.int32)
+    cb = jax.random.normal(jax.random.fold_in(KEY, 1), (m, c, d_c),
+                           jnp.float32) / np.sqrt(m)
+
+    def fwd_fn(quantize):
+        return jax.jit(lambda codes, cb: hd_ops.hash_decode(
+            codes, cb, interpret=interpret, quantize=quantize))
+
+    def bwd_fn(quantize):
+        return jax.jit(jax.grad(lambda cb, codes: hd_ops.hash_decode(
+            codes, cb, interpret=interpret, quantize=quantize).sum()))
+
+    out_f32 = fwd_fn("none")(codes, cb)
+    variants = {
+        "float32": (cb, "none"),
+        "bfloat16": (cb.astype(jnp.bfloat16), "none"),
+        "int8": (cb, "int8"),      # quantized + dequant fused in the kernel
+    }
+    entries = []
+    for dtype, (cb_v, quantize) in variants.items():
+        t_fwd = time_fn(fwd_fn(quantize), codes, cb_v)
+        t_bwd = time_fn(bwd_fn(quantize), cb_v, codes)
+        out = fwd_fn(quantize)(codes, cb_v)
+        rel = float(jnp.linalg.norm(out.astype(jnp.float32) - out_f32)
+                    / jnp.linalg.norm(out_f32))
+        bound = DRIFT_BOUNDS.get(dtype)
+        if bound is not None and rel > bound:
+            raise AssertionError(
+                f"fused decode {dtype} drift {rel:.4g} exceeds the "
+                f"documented bound {bound} (core.backend.DRIFT_BOUNDS)")
+        roof = decode_roofline(B, c, m, d_c, dtype, measured_us=t_fwd)
+        entries.append(bench_entry(
+            f"hash_decode_fused/{dtype}", mode=mode, dtype=dtype,
+            fwd_us=t_fwd, fwd_bwd_us=t_bwd,
+            rel_err_vs_f32=rel, drift_bound=bound,
+            modeled=roof,
+            hbm_bytes=decode_hbm_bytes(B, c, m, d_c, dtype)))
+        emit(f"kernels/hash_decode_fused/{dtype}/fwd", t_fwd,
+             f"B={B},c={c},m={m},d_c={d_c} mode={mode} "
+             f"hbm_bytes={roof['hbm_bytes']:.0f} "
+             f"roofline_step_us={roof['step_us']:.2f} "
+             f"achieved_vs_roofline={roof['achieved_vs_roofline']:.2e} "
+             f"rel_err={rel:.2e}")
+        emit(f"kernels/hash_decode_fused/{dtype}/fwd_bwd", t_bwd,
+             f"B={B},c={c},m={m},d_c={d_c} mode={mode}")
+
+    by_dtype = {e["dtype"]: e for e in entries}
+    cb_f32 = by_dtype["float32"]["modeled"]["hbm_bytes_codebooks"]
+    cb_int8 = by_dtype["int8"]["modeled"]["hbm_bytes_codebooks"]
+    reduction = cb_f32 / cb_int8
+    if reduction < MIN_INT8_BYTE_REDUCTION:
+        raise AssertionError(
+            f"int8 codebook byte reduction {reduction:.2f}x < "
+            f"{MIN_INT8_BYTE_REDUCTION}x")
+    emit("kernels/hash_decode_fused/int8_codebook_byte_reduction",
+         0.0, f"{reduction:.2f}x vs f32 (>= {MIN_INT8_BYTE_REDUCTION}x)")
+
+    report["fused_hash_decode"] = {
+        "shape": {"B": B, **DECODE_SHAPE},
+        "int8_codebook_byte_reduction_vs_f32": reduction,
+        "entries": entries,
+    }
 
 
 def run():
+    report = {"device": jax.default_backend()}
+
     # decode: gather vs onehot (B=8192 tokens, paper §5.3 c/m, d_c=512)
     cfg = DecoderConfig(c=256, m=16, d_c=512, d_m=512, d_e=64,
                         compute_dtype="float32")
@@ -33,6 +130,9 @@ def run():
         us = time_fn(f, p, codes)
         emit(f"kernels/hash_decode/{impl}/cpu", us,
              "B=8192,c=256,m=16,d_c=512 (CPU favors gather; onehot targets the MXU)")
+
+    # fused pallas kernel at every decode precision -> BENCH_kernels.json
+    _fused_decode_bench(report)
 
     # dense-table lookup baseline (what compression replaces)
     table = jax.random.normal(KEY, (200_000, 64))
@@ -54,3 +154,16 @@ def run():
     v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 1024, 64))
     us = time_fn(jax.jit(lambda q, k, v: mha_ref(q, k, v, causal=True)), q, k, v)
     emit("kernels/attention_xla/cpu", us, "B1,H8,K2,S1024,D64")
+
+    # smoke runs exercise the path with 1-iteration throwaway timings —
+    # never overwrite the committed measurement
+    if common.SMOKE:
+        emit("kernels/json", 0.0, f"smoke: skipped writing {OUT_PATH.name}")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        emit("kernels/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -100,6 +100,9 @@ def run(n_shards, impl=None):
     rows_total = batch["frontier"].unique.shape[0]
     out = {"n_shards": n_shards,
            "lookup_impl": sp.model.embedding.lookup_impl,
+           # every BENCH entry carries mode + dtype (tools/ci.sh gate);
+           # the sharded lookups are XLA-native at the model compute dtype
+           "mode": "native", "dtype": sp.model.compute_dtype,
            "step_us": per_step, "losses": losses,
            "frontier_rows_total": rows_total,
            "frontier_rows_per_device": rows_total // n_shards,

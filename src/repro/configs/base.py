@@ -27,6 +27,17 @@ class EmbeddingSpec:
     hops: int = 1             # §6.1 higher-order adjacency (A^k auxiliary)
     cache_capacity: int = 0   # hot-node decode cache slots (0 = disabled)
     cache_staleness: int = 0  # codebook versions a cached embedding may lag
+    # Plan-ahead miss partition for cached *training* (graph.engine.
+    # MissPlanningSource): the prefetch thread permutes batch k+1's frontier
+    # miss-first against a host cache shadow while step k runs, so the train
+    # step decodes only (predicted) misses.  Single-shard dedup runs only.
+    cache_plan_misses: bool = False
+    # Decode precision (core.backend.MixedPrecisionPolicy): codebook/w0
+    # storage dtype (None = the model's compute dtype) and absmax-int8
+    # codebook quantization with dequant fused into the decode.  A quantized
+    # or bf16 run is a spec field change — JSON / checkpoint round-trips.
+    param_dtype: Optional[str] = None   # e.g. "bfloat16"
+    quantize: str = "none"              # "none" | "int8"
 
     def to_config(self, n_entities: int, d_e: int, compute_dtype: str) -> EmbeddingConfig:
         return EmbeddingConfig(
@@ -37,6 +48,7 @@ class EmbeddingSpec:
             threshold=self.threshold, hops=self.hops,
             cache_capacity=self.cache_capacity,
             cache_staleness=self.cache_staleness,
+            param_dtype=self.param_dtype, quantize=self.quantize,
         )
 
 

@@ -40,16 +40,24 @@ as the decoder parameters train.  A ``staleness`` budget (in codebook
 versions; the train step bumps the version on every optimizer update) bounds
 that drift; at staleness 0 every access re-decodes, reproducing the uncached
 computation exactly.
+
+Every backend carries a ``MixedPrecisionPolicy`` (param_dtype /
+compute_dtype / reduce_dtype / quantize) and states its dtype contract via
+``dtype_contract()``: codebooks may be stored bf16 or absmax-int8 (fused
+dequant in the pallas kernel, straight-through dequant in the XLA
+backends), but accumulation — the kernel's MXU accumulator, every psum and
+every scatter-add on the VJP path — is always ``reduce_dtype`` (f32).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jnp.ndarray
 
@@ -79,19 +87,95 @@ class BackendCapabilities:
     accelerator: Tuple[str, ...] = ("cpu", "gpu", "tpu")
 
 
+@dataclasses.dataclass(frozen=True)
+class MixedPrecisionPolicy:
+    """Dtype contract of a decode path (the zeroband param/compute/reduce
+    split, specialised to the decode hot op).
+
+    ``param_dtype``    storage dtype of codebooks/w0 entering the decode
+                       (None = use whatever the caller passed — the
+                       pre-policy behaviour, bit-exact with old configs)
+    ``compute_dtype``  activation dtype the caller works in (informational
+                       here — the decode itself always accumulates f32 and
+                       returns f32; callers cast the output down)
+    ``reduce_dtype``   accumulation dtype: the kernel's MXU accumulator and
+                       every psum / scatter-add on the VJP path.  Always
+                       float32 — backends hard-code it and tests assert it;
+                       the field exists so the contract is stated, not
+                       implied.
+    ``quantize``       "none" | "int8": absmax per-(codebook, code) int8
+                       values + f32 scales.  Fused dequant in the pallas
+                       kernel; straight-through dequant-identity in the XLA
+                       backends (bitwise-matching values, see
+                       kernels.hash_decode.ops).
+    """
+    param_dtype: Optional[str] = None
+    compute_dtype: Optional[str] = None
+    reduce_dtype: str = "float32"
+    quantize: str = "none"
+
+    def __post_init__(self):
+        if self.quantize not in ("none", "int8"):
+            raise ValueError(
+                f"quantize={self.quantize!r} not supported (expected 'none' "
+                f"or 'int8'; int4 packing is a documented future extension)")
+        if self.reduce_dtype != "float32":
+            raise ValueError(
+                "reduce_dtype must be 'float32': every backend accumulates "
+                "and reduces in f32 (that is the stated contract)")
+
+
+DEFAULT_POLICY = MixedPrecisionPolicy()
+
+# Documented decode drift bounds vs the all-f32 path (docs/decode_backends.md
+# dtype-contract table): max-abs output error <= bound * max-abs(f32 output)
+# per decode, and end-to-end step-0 loss relative drift within the same
+# bound, for EVERY backend (incl. owner and cached) — tests/test_precision.py
+# asserts both, the CI bench gate asserts the int8 one.
+DRIFT_BOUNDS = {"bfloat16": 1.5e-2, "int8": 5e-2}
+
+
 class DecodeBackend:
     """Protocol: subclasses set ``name``/``capabilities``/``preferred_pad``
     and implement ``decode``.  ``preferred_pad`` is the batch multiple the
     backend runs best at — frontier padding (``pad_to``) should be a multiple
-    of it so the hot path never hits the padding fix-up."""
+    of it so the hot path never hits the padding fix-up.  ``policy`` is the
+    backend's ``MixedPrecisionPolicy``; the default (all-None) is a no-op
+    cast-wise, so legacy construction sites keep bit-exact numerics."""
 
     name: str = "abstract"
     capabilities = BackendCapabilities()
     preferred_pad: int = 1
+    policy: MixedPrecisionPolicy = DEFAULT_POLICY
 
     def decode(self, codes: Array, codebooks: Array,
                w0: Optional[Array] = None) -> Array:
         raise NotImplementedError
+
+    def _prep(self, codebooks: Array, w0: Optional[Array]):
+        """Cast params to the policy's storage dtype (simulating bf16 HBM
+        residency); int8 handling is backend-specific — fused scales in
+        pallas, straight-through dequant in the XLA backends — so it is NOT
+        applied here."""
+        p = self.policy
+        if p.param_dtype is not None:
+            codebooks = codebooks.astype(p.param_dtype)
+            if w0 is not None:
+                w0 = w0.astype(p.param_dtype)
+        return codebooks, w0
+
+    def dtype_contract(self) -> Dict[str, str]:
+        """The backend's stated dtype contract (docs/decode_backends.md)."""
+        p = self.policy
+        storage = ("int8 values + float32 scales" if p.quantize == "int8"
+                   else (p.param_dtype or "caller-provided"))
+        return {
+            "backend": self.name,
+            "storage": storage,
+            "compute": p.compute_dtype or "float32",
+            "accumulate": p.reduce_dtype,
+            "output": "float32",
+        }
 
     def decode_frontier(self, codes: Array, codebooks: Array,
                         w0: Optional[Array] = None, *, plan=None) -> Array:
@@ -113,7 +197,17 @@ class GatherBackend(DecodeBackend):
     capabilities = BackendCapabilities(grad=True, fused=False)
     preferred_pad = 1
 
+    def __init__(self, policy: Optional[MixedPrecisionPolicy] = None):
+        self.policy = policy or DEFAULT_POLICY
+
     def decode(self, codes, codebooks, w0=None):
+        codebooks, w0 = self._prep(codebooks, w0)
+        if self.policy.quantize == "int8":
+            from repro.kernels.hash_decode import ops as hd_ops
+            # straight-through dequant: forward sees q·s (element-for-element
+            # the same f32 products as the fused kernel), backward is the
+            # identity to the float masters
+            codebooks = hd_ops.quantize_dequantize(codebooks)
         m = codebooks.shape[0]
         acc = codebooks[0].astype(jnp.float32)[codes[:, 0]]
         for j in range(1, m):
@@ -131,7 +225,14 @@ class OnehotBackend(DecodeBackend):
     capabilities = BackendCapabilities(grad=True, fused=False)
     preferred_pad = _SUBLANE
 
+    def __init__(self, policy: Optional[MixedPrecisionPolicy] = None):
+        self.policy = policy or DEFAULT_POLICY
+
     def decode(self, codes, codebooks, w0=None):
+        codebooks, w0 = self._prep(codebooks, w0)
+        if self.policy.quantize == "int8":
+            from repro.kernels.hash_decode import ops as hd_ops
+            codebooks = hd_ops.quantize_dequantize(codebooks)
         m, c, d_c = codebooks.shape
         B = codes.shape[0]
         iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2)
@@ -157,10 +258,12 @@ class PallasBackend(DecodeBackend):
         grad=True, fused=True, accelerator=("tpu",))
 
     def __init__(self, block_b: int = 256, block_d: int = 256,
-                 interpret: bool = False):
+                 interpret: bool = False,
+                 policy: Optional[MixedPrecisionPolicy] = None):
         self.block_b = int(block_b)
         self.block_d = int(block_d)
         self.interpret = bool(interpret)
+        self.policy = policy or DEFAULT_POLICY
         self.preferred_pad = self.block_b
 
     def _plan(self, B: int, d_c: int) -> Tuple[int, int, int, int]:
@@ -180,6 +283,7 @@ class PallasBackend(DecodeBackend):
     def decode(self, codes, codebooks, w0=None):
         from repro.kernels.hash_decode import ops as hd_ops
 
+        codebooks, w0 = self._prep(codebooks, w0)
         B = codes.shape[0]
         d_c = codebooks.shape[2]
         B_pad, block_b, d_pad, block_d = self._plan(B, d_c)
@@ -200,7 +304,8 @@ class PallasBackend(DecodeBackend):
                 w0 = jnp.pad(w0, (0, d_pad - d_c))
         out = hd_ops.hash_decode(
             codes, codebooks, w0,
-            block_b=block_b, block_d=block_d, interpret=self.interpret)
+            block_b=block_b, block_d=block_d, interpret=self.interpret,
+            quantize=self.policy.quantize)
         return out[:B, :d_c]
 
 
@@ -241,7 +346,11 @@ def _sharded_decode(base: DecodeBackend, mesh, axis: str,
             _, vjp = jax.vjp(
                 lambda c, s: base.decode(codes_l, c, s), cb_, w0_)
             gcb, gw0 = vjp(g_l)
-            return jax.lax.psum(gcb, axis), jax.lax.psum(gw0, axis)
+            # reduce_dtype contract: cross-shard accumulation happens in f32
+            # even when the params (and so their cotangents) are bf16
+            gcb = jax.lax.psum(gcb.astype(jnp.float32), axis).astype(cb_.dtype)
+            gw0 = jax.lax.psum(gw0.astype(jnp.float32), axis).astype(w0_.dtype)
+            return gcb, gw0
 
         gcb, gw0 = shard_map(
             local, mesh=mesh,
@@ -293,14 +402,21 @@ class ShardedBackend(DecodeBackend):
     capabilities = BackendCapabilities(grad=True, fused=False)
 
     def __init__(self, base: Optional[object] = None, axis: Optional[str] = None,
-                 mesh=None, interpret: bool = False):
+                 mesh=None, interpret: bool = False,
+                 policy: Optional[MixedPrecisionPolicy] = None):
         if base is None:
             base = "pallas" if jax.default_backend() == "tpu" else "onehot"
         _check_collective_base("sharded", base)
-        self.base = get_backend(base, interpret=interpret)
+        self.base = get_backend(base, interpret=interpret, policy=policy)
+        self.policy = self.base.policy
         self.axis = axis
         self.mesh = mesh
         self.preferred_pad = self.base.preferred_pad
+
+    def dtype_contract(self) -> Dict[str, str]:
+        contract = dict(self.base.dtype_contract(), backend=self.name)
+        contract["collective_reduce"] = "float32 (psum of codebook/w0 grads)"
+        return contract
 
     def _mesh_axis(self):
         return _active_mesh_axis(self.mesh, self.axis)
@@ -405,11 +521,16 @@ def _owner_decode(base: DecodeBackend, mesh, axis: str,
             g_send = (g_blk[jnp.clip(rr, 0, cap - 1)]
                       * (rr < cap)[..., None].astype(g_full.dtype))
             g_recv = all_to_all(g_send, axis)               # (n, oc, d)
-            ghat = jnp.zeros((ou, d), g_full.dtype).at[
-                ri_l[0].reshape(-1)].add(g_recv.reshape(-1, d))
+            # reduce_dtype contract: the per-requester scatter-add onto the
+            # owned rows accumulates in f32
+            ghat = jnp.zeros((ou, d), jnp.float32).at[
+                ri_l[0].reshape(-1)].add(
+                    g_recv.reshape(-1, d).astype(jnp.float32))
             _, vjp = jax.vjp(lambda c, sc: base.decode(owned, c, sc), cb_, w0_)
-            gcb, gw0 = vjp(ghat)
-            return jax.lax.psum(gcb, axis), jax.lax.psum(gw0, axis)
+            gcb, gw0 = vjp(ghat.astype(g_full.dtype))
+            gcb = jax.lax.psum(gcb.astype(jnp.float32), axis).astype(cb_.dtype)
+            gw0 = jax.lax.psum(gw0.astype(jnp.float32), axis).astype(w0_.dtype)
+            return gcb, gw0
 
         gcb, gw0 = shard_map(
             local, mesh=mesh,
@@ -448,17 +569,25 @@ class OwnerBackend(DecodeBackend):
     capabilities = BackendCapabilities(grad=True, fused=False)
 
     def __init__(self, base: Optional[object] = None, axis: Optional[str] = None,
-                 mesh=None, interpret: bool = False):
+                 mesh=None, interpret: bool = False,
+                 policy: Optional[MixedPrecisionPolicy] = None):
         if base is None:
             base = "pallas" if jax.default_backend() == "tpu" else "onehot"
         _check_collective_base("owner", base)
-        self.base = get_backend(base, interpret=interpret)
+        self.base = get_backend(base, interpret=interpret, policy=policy)
+        self.policy = self.base.policy
         self.axis = axis
         self.mesh = mesh
         self.preferred_pad = self.base.preferred_pad
         # plan-less fallback: the row-partitioned sharded decode (values are
         # identical — rows just decode once per holding shard, not per owner)
         self._fallback = ShardedBackend(self.base, axis=axis, mesh=mesh)
+
+    def dtype_contract(self) -> Dict[str, str]:
+        contract = dict(self.base.dtype_contract(), backend=self.name)
+        contract["collective_reduce"] = (
+            "float32 (cotangent scatter-add on owned rows + grad psum)")
+        return contract
 
     def decode(self, codes, codebooks, w0=None):
         return self._fallback.decode(codes, codebooks, w0)
@@ -531,7 +660,8 @@ def resolve_auto(duplication: Optional[float] = None) -> str:
 
 
 def get_backend(spec, *, interpret: bool = False,
-                duplication: Optional[float] = None) -> DecodeBackend:
+                duplication: Optional[float] = None,
+                policy: Optional[MixedPrecisionPolicy] = None) -> DecodeBackend:
     """Resolve a backend from a config string (or pass an instance through).
 
     ``auto`` picks a collective decode under a multi-device mesh (``owner``
@@ -540,7 +670,9 @@ def get_backend(spec, *, interpret: bool = False,
     formulation elsewhere.  ``sharded`` / ``owner`` accept an optional
     base-backend suffix — ``"owner:gather"`` decodes owner-local through the
     gather oracle (bitwise-stable row accumulation).  ``interpret`` affects
-    ``pallas`` (directly or as a collective base)."""
+    ``pallas`` (directly or as a collective base).  ``policy`` sets the
+    backend's ``MixedPrecisionPolicy``; it is only forwarded when given, so
+    test-registered factories without the kwarg keep working."""
     if isinstance(spec, DecodeBackend):
         return spec
     name = spec or "auto"
@@ -550,15 +682,29 @@ def get_backend(spec, *, interpret: bool = False,
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown decode backend {name!r}; known: {available_backends()}")
+    kwargs = {} if policy is None else {"policy": policy}
+
+    def build(factory, **fixed):
+        try:
+            return factory(**fixed, **kwargs)
+        except TypeError:
+            if not kwargs:
+                raise
+            # legacy factory without the policy kwarg (e.g. a test-registered
+            # fake): construct it plain and attach the policy as an attribute
+            be = factory(**fixed)
+            be.policy = policy
+            return be
+
     if name in ("sharded", "owner"):
-        return _REGISTRY[name](base=option or None, interpret=interpret)
+        return build(_REGISTRY[name], base=option or None, interpret=interpret)
     if option:
         raise ValueError(
             f"decode backend {name!r} takes no ':{option}' option "
             f"(only 'sharded:<base>' / 'owner:<base>' do)")
     if name == "pallas":
-        return _REGISTRY[name](interpret=interpret)
-    return _REGISTRY[name]()
+        return build(_REGISTRY[name], interpret=interpret)
+    return build(_REGISTRY[name])
 
 
 # ---------------------------------------------------------------------------
@@ -641,6 +787,25 @@ class CachedDecodeBackend:
 
     def init_state(self, capacity: int, d: int, dtype=jnp.float32) -> CacheState:
         return CacheState.create(capacity, d, dtype)
+
+    @staticmethod
+    def dtype_contract(base: Optional[DecodeBackend] = None) -> Dict[str, str]:
+        """Cache-layer dtype contract: misses inherit the base backend's
+        contract end to end; hits are served from ``CacheState.values``
+        (stored in the model's compute dtype) — so a cached hit adds one
+        compute-dtype round-trip on top of the base drift bound and nothing
+        else.  Hit/miss select and all bookkeeping are dtype-free."""
+        contract = {
+            "backend": "cached",
+            "storage": "CacheState.values in compute dtype (hits); "
+                       "base backend storage (misses)",
+            "compute": "base backend",
+            "accumulate": "float32 (base backend)",
+            "output": "float32",
+        }
+        if base is not None:
+            contract["base"] = base.dtype_contract()["backend"]
+        return contract
 
     def lookup(self, state: CacheState, ids: Array,
                decode_fn: Callable[[Array], Array],
@@ -809,3 +974,129 @@ class CachedDecodeBackend:
         step that touches decoder parameters."""
         return dataclasses.replace(
             state, version_counter=state.version_counter + 1)
+
+
+class HostCacheShadow:
+    """Host-side numpy replica of the ``CacheState`` *bookkeeping* (never
+    the values), used to plan miss-only decode for **training**.
+
+    The training miss partition (``graph.engine.MissPlanningSource``) must
+    know, while batch k+1 is still on the producer thread, which frontier
+    ids will be fresh cache hits when the jitted step consumes it — i.e.
+    after batch k's write-backs and version bump have landed on device.
+    The cache bookkeeping (``node_ids`` / ``version`` / ``last_used`` /
+    counters) depends only on the ``(ids, valid, n_decode)`` sequence,
+    never on decoded values, so a host replica fed the same per-step inputs
+    tracks the device cache *exactly*: ``update`` mirrors
+    ``CachedDecodeBackend.lookup_missonly``'s state update line for line
+    (same stable argsort, same protected / rank < n_free slot assignment)
+    followed by the train step's ``bump_version``.
+
+    Prediction safety is one-sided.  A predicted miss that turns out to hit
+    is harmless — ``lookup_missonly`` serves prefix hits from the cache; a
+    predicted hit that actually misses reads zeros.  ``clear()`` therefore
+    resets to the empty shadow (plans *everything* as a miss: slower, never
+    wrong), and ``sync_from_cache_state`` re-anchors an out-of-sync shadow
+    to a restored device cache on checkpoint resume.
+    """
+
+    _EMPTY = np.iinfo(np.int32).min // 2   # matches CacheState.create
+
+    def __init__(self, capacity: int, staleness: int = 0):
+        self.capacity = int(capacity)
+        self.staleness = int(staleness)
+        self.clear()
+
+    def clear(self) -> None:
+        C = self.capacity
+        self.node_ids = np.full((C,), -1, np.int32)
+        self.version = np.full((C,), self._EMPTY, np.int32)
+        self.last_used = np.full((C,), self._EMPTY, np.int32)
+        self.version_counter = 0
+        self.clock = 0
+
+    # -- (de)serialisation ----------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-friendly copy (checkpointable alongside the source state)."""
+        return {
+            "capacity": self.capacity, "staleness": self.staleness,
+            "node_ids": self.node_ids.tolist(),
+            "version": self.version.tolist(),
+            "last_used": self.last_used.tolist(),
+            "version_counter": int(self.version_counter),
+            "clock": int(self.clock),
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        if int(snap["capacity"]) != self.capacity:
+            raise ValueError(
+                f"shadow snapshot capacity {snap['capacity']} != {self.capacity}")
+        self.staleness = int(snap["staleness"])
+        self.node_ids = np.asarray(snap["node_ids"], np.int32).copy()
+        self.version = np.asarray(snap["version"], np.int32).copy()
+        self.last_used = np.asarray(snap["last_used"], np.int32).copy()
+        self.version_counter = int(snap["version_counter"])
+        self.clock = int(snap["clock"])
+
+    def sync_from_cache_state(self, state: CacheState) -> None:
+        """Re-anchor to a device cache (exact: same fields, host copies)."""
+        self.node_ids = np.asarray(state.node_ids, np.int32).copy()
+        self.version = np.asarray(state.version, np.int32).copy()
+        self.last_used = np.asarray(state.last_used, np.int32).copy()
+        self.version_counter = int(state.version_counter)
+        self.clock = int(state.clock)
+
+    # -- planning --------------------------------------------------------
+    def fresh_ids(self) -> np.ndarray:
+        """Ids whose cached entry will still be within the staleness budget
+        at the next lookup (the shadow is post-bump, like the device)."""
+        live = self.node_ids >= 0
+        fresh = (self.version_counter - self.version) <= self.staleness
+        return self.node_ids[live & fresh]
+
+    def plan(self, ids: np.ndarray, valid: np.ndarray):
+        """``(perm, n_miss)`` for the next batch — ``plan_missonly``
+        against the *fresh* (not merely present) shadow entries."""
+        return CachedDecodeBackend.plan_missonly(self.fresh_ids(), ids, valid)
+
+    # -- state transition ------------------------------------------------
+    def update(self, ids: np.ndarray, valid: np.ndarray, n_decode: int) -> None:
+        """Replay one training step's cache transition: the bookkeeping of
+        ``lookup_missonly(ids, ..., n_decode, valid)`` plus the optimizer
+        ``bump_version``.  ``ids``/``valid`` must be the *permuted* arrays
+        the device step will see."""
+        C = self.capacity
+        ids = np.asarray(ids, np.int32)
+        valid = np.asarray(valid, bool)
+        U = ids.shape[0]
+        eq = ids[:, None] == self.node_ids[None, :]            # (U, C)
+        found = eq.any(axis=1) & valid
+        slot = eq.argmax(axis=1)
+        age = self.version_counter - self.version[slot]
+        hit = found & (age <= self.staleness)
+        decoded = np.arange(U) < int(n_decode)
+
+        self.clock += 1
+        last_used = self.last_used.copy()
+        last_used[slot[hit]] = self.clock                      # hit refresh
+
+        protected = np.zeros((C,), bool)
+        protected[slot[found]] = True
+        n_free = C - int(protected.sum())
+        # device argsort (jnp) is stable — kind="stable" keeps slot
+        # assignment bit-identical through the INT32_MAX / empty-slot ties
+        evict_order = np.argsort(
+            np.where(protected, np.iinfo(np.int32).max, last_used),
+            kind="stable")
+        needs_slot = ~found & decoded & valid
+        rank = np.cumsum(needs_slot) - 1
+        new_slot = evict_order[np.clip(rank, 0, C - 1)]
+        write = (~hit) & decoded & (found | (needs_slot & (rank < n_free)))
+        widx = np.where(found, slot, new_slot)
+
+        w = widx[write]
+        self.node_ids[w] = ids[write]
+        self.version[w] = self.version_counter
+        last_used[w] = self.clock
+        self.last_used = last_used
+        self.version_counter += 1                              # bump_version

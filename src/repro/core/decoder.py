@@ -39,6 +39,20 @@ class DecoderConfig:
     variant: str = "full"  # "full" (trainable codebooks) | "light" (frozen + W0)
     lookup_impl: str = "onehot"  # "gather" | "onehot" | "pallas" | "auto"
     compute_dtype: str = "bfloat16"
+    # Decode precision knobs (core.backend.MixedPrecisionPolicy): storage
+    # dtype of codebooks/w0 entering the decode (None = compute_dtype) and
+    # optional absmax-int8 codebook quantization with fused dequant.
+    param_dtype: Optional[str] = None
+    quantize: str = "none"     # "none" | "int8"
+
+    def precision_policy(self) -> "MixedPrecisionPolicy":
+        from repro.core.backend import MixedPrecisionPolicy
+        return MixedPrecisionPolicy(
+            param_dtype=self.param_dtype or self.compute_dtype,
+            compute_dtype=self.compute_dtype,
+            reduce_dtype="float32",
+            quantize=self.quantize,
+        )
 
     def trainable_params(self) -> int:
         """Paper §3.2 closed-form trainable-parameter count."""
@@ -105,13 +119,15 @@ def apply_decoder(
     lead = codes.shape[:-1]
     codes2d = codes.reshape(-1, cfg.m)
     dtype = jnp.dtype(cfg.compute_dtype)
+    policy = cfg.precision_policy()
+    pdtype = jnp.dtype(policy.param_dtype)
 
     cb = params["codebooks_buf"] if cfg.variant == "light" else params["codebooks"]
-    cb = cb.astype(dtype)
-    w0 = params["w0"].astype(dtype) if cfg.variant == "light" else None
+    cb = cb.astype(pdtype)
+    w0 = params["w0"].astype(pdtype) if cfg.variant == "light" else None
 
     be = backend if backend is not None else get_backend(
-        cfg.lookup_impl, interpret=interpret)
+        cfg.lookup_impl, interpret=interpret, policy=policy)
     if plan is not None and hasattr(be, "decode_frontier"):
         h = be.decode_frontier(codes2d, cb, w0, plan=plan).astype(dtype)
     else:

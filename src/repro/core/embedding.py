@@ -43,6 +43,11 @@ class EmbeddingConfig:
     n_layers: int = 3
     lookup_impl: str = "onehot"   # decode backend name or "auto" (core.backend)
     compute_dtype: str = "bfloat16"
+    # Decode precision (core.backend.MixedPrecisionPolicy): codebook/w0
+    # storage dtype (None = compute_dtype) and absmax-int8 quantization with
+    # dequant fused into the decode ("none" | "int8"); compressed kinds only.
+    param_dtype: Optional[str] = None
+    quantize: str = "none"
     # Algorithm-1 encoding knobs (hash kinds only): "median" is the paper's
     # threshold, "zero" the Charikar-LSH baseline (Fig. 3); hops>1 pushes the
     # projection through the graph k times (§6.1 higher-order adjacency).
@@ -64,6 +69,7 @@ class EmbeddingConfig:
             c=self.c, m=self.m, d_c=self.d_c, d_m=self.d_m, d_e=self.d_e,
             n_layers=self.n_layers, variant=variant,
             lookup_impl=self.lookup_impl, compute_dtype=self.compute_dtype,
+            param_dtype=self.param_dtype, quantize=self.quantize,
         )
 
 

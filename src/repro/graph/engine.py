@@ -96,9 +96,11 @@ class GNNModel:
                  duplication: Optional[float] = None):
         from repro.core.backend import get_backend
         self.cfg = cfg
+        policy = cfg.embedding_config().decoder_config().precision_policy()
         self.backend = get_backend(cfg.embedding.lookup_impl,
                                    interpret=interpret,
-                                   duplication=duplication)
+                                   duplication=duplication,
+                                   policy=policy)
 
     def init(self, key, codes=None, aux=None):
         return gnn.init_gnn(key, self.cfg, codes=codes, aux=aux)
@@ -120,10 +122,16 @@ class GNNModel:
 
     def apply_cached(self, params, batch: Batch, cache_state):
         """Frontier batches decode through the hot-node cache; every other
-        batch type falls back to ``apply`` with the state passed through."""
+        batch type falls back to ``apply`` with the state passed through.
+        A frontier carrying a static ``n_decode`` (miss-first permuted by
+        ``MissPlanningSource``) decodes only its planned-miss prefix."""
         if isinstance(batch, dict):
             batch = batch_view(batch)
         if isinstance(batch, FrontierBatch):
+            if batch.n_decode is not None:
+                return gnn.sage_forward_frontier_missonly(
+                    params, batch, self.cfg, cache_state, batch.n_decode,
+                    backend=self.backend)
             return gnn.sage_forward_frontier_cached(
                 params, batch, self.cfg, cache_state, backend=self.backend)
         return self.apply(params, batch), cache_state
@@ -385,6 +393,96 @@ class ShardedSageBatchSource:
             "restoring a sharded sage batch source onto a different shard count"
         for sh in self.shards:
             sh.step = int(state["step"])
+
+
+class MissPlanningSource:
+    """Plan-ahead miss partition for *training* with the hot-node cache.
+
+    Serving already decodes only cache misses (``serving.gnn``: the frontier
+    is permuted miss-first against the live cache and only a bucketed prefix
+    enters the decoder).  Training couldn't — the cache state evolves every
+    step, and by the time the prefetch thread sees batch k+1 the device
+    cache for batch k hasn't been updated yet.  This wrapper closes that
+    gap: it advances a ``core.backend.HostCacheShadow`` (an exact numpy
+    replica of the cache *bookkeeping* — the update depends only on the id
+    sequence, never on decoded values) one step per produced batch, so the
+    producer thread can partition batch k+1's misses while step k runs.
+
+    Each emitted frontier is permuted miss-first with its index maps
+    remapped through the inverse permutation, carries an explicit ``valid``
+    mask (the prefix mask no longer survives the permutation) and a static
+    bucketed ``n_decode`` (geometric ``pad_to`` doubling, one jit retrace
+    per bucket — the serving engine's scheme).  The train step then takes
+    the ``lookup_missonly`` path: only the prefix enters the decoder.
+
+    A planned miss that turns out to hit is served from the cache anyway
+    (harmless); a planned *hit* that misses would read zeros, which is why
+    the shadow replays the device update exactly.  On checkpoint resume the
+    runtime re-anchors the shadow from the restored device ``CacheState``
+    (``sync_shadow``), covering state dicts that predate the shadow key.
+
+    Only single-shard frontiers qualify: the permutation would break the
+    per-shard row blocks of stacked sharded batches and the row indexing of
+    an ``OwnerPlan`` (``next_batch`` raises on a planned batch).
+    """
+
+    def __init__(self, source, capacity: int, staleness: int = 0,
+                 pad_to: int = 256):
+        from repro.core.backend import HostCacheShadow
+        self.source = source
+        self.pad_to = max(1, int(pad_to))
+        self.shadow = HostCacheShadow(capacity, staleness)
+
+    def _bucket(self, n_miss: int, cap: int) -> int:
+        if n_miss <= 0:
+            return 0
+        b = self.pad_to
+        while b < n_miss:
+            b *= 2
+        return min(b, cap)
+
+    def next_batch(self) -> Dict[str, Any]:
+        batch = dict(self.source.next_batch())
+        fb = batch["frontier"]
+        if fb.plan is not None:
+            raise ValueError(
+                "MissPlanningSource: owner-planned batches cannot be "
+                "miss-permuted (plan rows index the unpermuted frontier)")
+        ids = np.asarray(fb.unique)
+        U = ids.shape[0]
+        valid = (np.asarray(fb.valid) if fb.valid is not None
+                 else np.arange(U) < int(fb.n_unique))
+        perm, n_miss = self.shadow.plan(ids, valid)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(U, dtype=np.int32)
+        n_dec = self._bucket(n_miss, U)
+        ids_p, valid_p = ids[perm], valid[perm]
+        batch["frontier"] = FrontierBatch(
+            unique=ids_p,
+            index_maps=tuple(inv[np.asarray(m)] for m in fb.index_maps),
+            n_unique=fb.n_unique, valid=valid_p, n_decode=n_dec)
+        self.shadow.update(ids_p, valid_p, n_dec)
+        return batch
+
+    # -- checkpointable state -------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        sd = dict(self.source.state_dict())
+        sd["miss_shadow"] = self.shadow.snapshot()
+        return sd
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.source.load_state_dict(state)
+        if "miss_shadow" in state:
+            self.shadow.restore(state["miss_shadow"])
+        else:
+            # pre-shadow state dict: empty shadow plans everything as a
+            # miss (safe); the runtime's resume re-syncs from the device
+            # cache right after (sync_shadow)
+            self.shadow.clear()
+
+    def sync_shadow(self, cache_state) -> None:
+        """Re-anchor the shadow to a restored device ``CacheState``."""
+        self.shadow.sync_from_cache_state(cache_state)
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,15 @@ class RuntimeSpec:
                               measured duplication beats the threshold.
       ``model.embedding.cache_capacity``/``cache_staleness``  hot-node
                               decode cache in the train state.
+      ``model.embedding.cache_plan_misses``  plan-ahead miss partition for
+                              cached training: the prefetch thread permutes
+                              the next batch's frontier miss-first against a
+                              host cache shadow, so the jitted step decodes
+                              only (predicted) misses — the training twin of
+                              serving's miss-only decode (single-shard).
+      ``model.embedding.param_dtype``/``quantize``  decode precision: bf16
+                              codebook storage and/or fused absmax-int8
+                              (``core.backend.MixedPrecisionPolicy``).
       ``owner_cap``/``owner_unique_cap``  static owner-exchange capacities
                               (None = sized from ``frontier_cap``, see
                               ``graph.sampler.default_owner_caps``).
@@ -334,6 +343,24 @@ class GraphRuntime:
                     self.sampler, tr, self.labels, spec.batch_size,
                     seed=spec.data_seed, dedup=spec.dedup,
                     pad_to=spec.pad_to, frontier_cap=spec.frontier_cap)
+            emb = cfg.embedding
+            if emb.cache_plan_misses:
+                # plan-ahead miss partition: the producer thread permutes the
+                # next frontier miss-first against a host cache shadow, so
+                # the train step's decode covers only (predicted) misses
+                if emb.cache_capacity <= 0 or not cfg.embedding_config().is_compressed:
+                    raise ValueError(
+                        "cache_plan_misses needs a hot-node cache on a "
+                        "compressed embedding (cache_capacity > 0)")
+                if spec.n_shards > 1 or not spec.dedup:
+                    raise ValueError(
+                        "cache_plan_misses is single-shard dedup only: the "
+                        "miss-first permutation breaks stacked per-shard row "
+                        "blocks and owner-plan row indexing")
+                from repro.graph.engine import MissPlanningSource
+                self.source = MissPlanningSource(
+                    self.source, emb.cache_capacity, emb.cache_staleness,
+                    pad_to=spec.pad_to)
 
         # -- iterator (prefetch is a knob, not a code path) ----------------
         if spec.prefetch_depth > 0 and not self.fullgraph:
@@ -396,6 +423,12 @@ class GraphRuntime:
             rt.state = state
             if "data" in rextra and hasattr(rt.data_iter, "load_state_dict"):
                 rt.data_iter.load_state_dict(rextra["data"])
+            # miss-planning runs: re-anchor the host cache shadow to the
+            # restored device cache (exact even for state dicts that predate
+            # the shadow snapshot key)
+            src = getattr(rt.data_iter, "source", rt.data_iter)
+            if hasattr(src, "sync_shadow") and "cache" in rt.state:
+                src.sync_shadow(rt.state["cache"])
         return rt
 
     # -- training --------------------------------------------------------

@@ -222,6 +222,14 @@ class FrontierBatch:
                    batches whose source enables it carry one.  Padding rows
                    of a planned batch are decoded to zeros instead of
                    duplicate embeddings (no index map points at them).
+    ``n_decode``   optional int — static miss-first decode count.  Set by
+                   ``graph.engine.MissPlanningSource``: the frontier has been
+                   permuted so rows [0, n_decode) are the planned cache
+                   misses and every valid row past it is a predicted cache
+                   hit (``CachedDecodeBackend.lookup_missonly`` semantics).
+                   Static (pytree aux, not a leaf): each bucketed value
+                   retraces jit once, exactly like the serving engine's
+                   miss buckets.
     """
 
     unique: np.ndarray
@@ -229,12 +237,13 @@ class FrontierBatch:
     n_unique: np.ndarray
     valid: Optional[np.ndarray] = None
     plan: Optional[OwnerPlan] = None
+    n_decode: Optional[int] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         leaves = (self.unique, self.n_unique) + tuple(self.index_maps)
         aux = (len(self.index_maps), self.valid is not None,
-               self.plan is not None)
+               self.plan is not None, self.n_decode)
         if self.valid is not None:
             leaves = leaves + (self.valid,)
         if self.plan is not None:
@@ -243,12 +252,12 @@ class FrontierBatch:
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        n_maps, has_valid, has_plan = aux
+        n_maps, has_valid, has_plan, n_decode = aux
         maps = tuple(leaves[2:2 + n_maps])
         rest = list(leaves[2 + n_maps:])
         valid = rest.pop(0) if has_valid else None
         plan = rest.pop(0) if has_plan else None
-        return cls(leaves[0], maps, leaves[1], valid, plan)
+        return cls(leaves[0], maps, leaves[1], valid, plan, n_decode)
 
     # -- construction ----------------------------------------------------
     @classmethod

@@ -5,13 +5,21 @@ Forward runs the Pallas kernel (or the jnp oracle when ``use_kernel=False``
     d_codebooks[j, code, :] += g ⊙ w0       (scatter-add == onehotᵀ @ g)
     d_w0 = Σ_b g ⊙ codebook_sum             (recomputed, not saved)
 Codes are integers — no gradient flows to them.
+
+``quantize="int8"`` runs the decode against per-(codebook, code) absmax
+int8 values with the dequant fused into the kernel (scales operand).  The
+f32/bf16 master codebooks stay the differentiable primal: the codebook
+cotangent is a value-independent scatter-add of the output cotangent, so
+the straight-through estimator through round() is exactly the unquantized
+backward; only ``d_w0`` (which linearizes through the decoded values) uses
+the dequantized codebooks to match the forward.
 """
 
 from __future__ import annotations
 
 import warnings
 from functools import partial
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,18 +32,80 @@ from repro.kernels.hash_decode.ref import hash_decode_ref
 _SUBLANE = 8
 _LANE = 128
 
-_warned_fallback = False
+# (B, d_c, reason) triples already warned about — one warning per distinct
+# (shape, reason), so a new fallback cause is never silenced by an earlier,
+# unrelated one.  Tests reset via ``reset_fallback_warnings()``.
+_warned_fallback: set = set()
+
+
+def reset_fallback_warnings() -> None:
+    """Clear the warn-once memory (test hook: lets a test assert the
+    fallback warning fires regardless of what ran before it)."""
+    _warned_fallback.clear()
+
+
+def _fallback_reasons(B: int, d_c: int, block_b: int, block_d: int,
+                      *, c: Optional[int] = None, m: Optional[int] = None,
+                      quantized: bool = False) -> List[str]:
+    """Why the kernel can't run these shapes ([] == it can): the (clamped)
+    blocks must divide the array dims AND be hardware-tileable, and the
+    quantized path's (m, c) scale table must itself be a legal tile.  The
+    old check ``B % min(block_b, B)`` was vacuously 0 whenever ``block_b >
+    B`` — it reported e.g. B=100 as aligned, which only works in interpret
+    mode (100 is not a sublane multiple) and silently diverged from TPU
+    behaviour."""
+    bb, bd = min(block_b, B), min(block_d, d_c)
+    reasons = []
+    if B % bb != 0 or d_c % bd != 0:
+        reasons.append("block-divide")
+    if bb % _SUBLANE != 0 or bd % _LANE != 0:
+        reasons.append("block-tile")
+    if quantized and (m % _SUBLANE != 0 or c % _LANE != 0):
+        reasons.append("scales-tile")
+    return reasons
 
 
 def _aligned(B: int, d_c: int, block_b: int, block_d: int) -> bool:
-    """True iff the kernel can run: the (clamped) blocks must divide the
-    array dims AND be hardware-tileable.  The old check ``B % min(block_b,
-    B)`` was vacuously 0 whenever ``block_b > B`` — it reported e.g. B=100
-    as aligned, which only works in interpret mode (100 is not a sublane
-    multiple) and silently diverged from TPU behaviour."""
-    bb, bd = min(block_b, B), min(block_d, d_c)
-    return (B % bb == 0 and d_c % bd == 0
-            and bb % _SUBLANE == 0 and bd % _LANE == 0)
+    """True iff the (unquantized) kernel can run — see _fallback_reasons."""
+    return not _fallback_reasons(B, d_c, block_b, block_d)
+
+
+def quantize_codebooks(codebooks: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(codebook, code) absmax int8 quantization (the
+    ``optim/compress.py`` idiom at code-vector granularity).
+
+    codebooks (m, c, d_c) any float -> (q int8 (m, c, d_c), scales f32
+    (m, c)); all-zero code vectors get scale 1 so dequant is exact."""
+    cb = codebooks.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(cb), axis=2)
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(cb / scales[:, :, None]), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_codebooks(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(q int8 (m, c, d_c), scales f32 (m, c)) -> f32 (m, c, d_c)."""
+    return q.astype(jnp.float32) * scales.astype(jnp.float32)[:, :, None]
+
+
+@jax.custom_vjp
+def quantize_dequantize(codebooks: jnp.ndarray) -> jnp.ndarray:
+    """dequant(quantize(cb)): the decode-visible value of int8-stored
+    codebooks, with a straight-through (identity) backward to the float
+    masters.  The XLA backends use this to bitwise-match the fused kernel's
+    scaled-one-hot dequant (same f32 products, see kernel.py)."""
+    return dequantize_codebooks(*quantize_codebooks(codebooks))
+
+
+def _qdq_fwd(codebooks):
+    return quantize_dequantize(codebooks), jnp.zeros((), codebooks.dtype)
+
+
+def _qdq_bwd(dtype_token, g):
+    return (g.astype(dtype_token.dtype),)
+
+
+quantize_dequantize.defvjp(_qdq_fwd, _qdq_bwd)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
@@ -70,6 +140,45 @@ def _bwd(block_b, block_d, interpret, use_kernel, res, g):
 _hash_decode.defvjp(_fwd, _bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _hash_decode_int8(codes, codebooks, w0, block_b, block_d, interpret, use_kernel):
+    q, scales = quantize_codebooks(codebooks)
+    if use_kernel:
+        return hash_decode_fwd(codes, q, w0, scales,
+                               block_b=block_b, block_d=block_d,
+                               interpret=interpret)
+    return hash_decode_ref(codes, q, w0, scales=scales)
+
+
+def _fwd_int8(codes, codebooks, w0, block_b, block_d, interpret, use_kernel):
+    out = _hash_decode_int8(codes, codebooks, w0, block_b, block_d, interpret,
+                            use_kernel)
+    return out, (codes, codebooks, w0)
+
+
+def _bwd_int8(block_b, block_d, interpret, use_kernel, res, g):
+    codes, codebooks, w0 = res
+    m, c, _ = codebooks.shape
+    g = g.astype(jnp.float32)
+    gw = g * w0.astype(jnp.float32)[None, :] if w0 is not None else g
+    onehot = (codes[:, :, None] == jnp.arange(c)[None, None, :]).astype(jnp.float32)
+    # straight-through to the float masters: the codebook cotangent never
+    # reads codebook VALUES, so it is identical to the unquantized backward
+    d_cb = jnp.einsum("bmc,bd->mcd", onehot, gw).astype(codebooks.dtype)
+    if w0 is not None:
+        # d_w0 linearizes through the decoded values — use what the forward
+        # actually decoded (the dequantized codebooks), not the masters
+        deq = dequantize_codebooks(*quantize_codebooks(codebooks))
+        summed = jnp.einsum("bmc,mcd->bd", onehot, deq)
+        d_w0 = jnp.einsum("bd,bd->d", g, summed).astype(w0.dtype)
+    else:
+        d_w0 = None
+    return None, d_cb, d_w0
+
+
+_hash_decode_int8.defvjp(_fwd_int8, _bwd_int8)
+
+
 def hash_decode(
     codes: jnp.ndarray,
     codebooks: jnp.ndarray,
@@ -79,24 +188,41 @@ def hash_decode(
     block_d: int = 256,
     interpret: bool = False,
     use_kernel: bool = True,
+    quantize: str = "none",
 ) -> jnp.ndarray:
     """codes (B, m) int32, codebooks (m, c, d_c) -> (B, d_c) f32.
 
+    ``quantize="int8"`` decodes against absmax-int8 codebooks with the
+    dequant fused into the kernel; gradients flow straight-through to the
+    float masters (module docstring).
+
     Unaligned shapes fall back to the jnp reference path with a one-time
-    warning; callers that want the kernel unconditionally should pad to
-    block multiples first (``core.backend.PallasBackend`` does exactly
-    that)."""
-    global _warned_fallback
+    warning per (shape, reason); callers that want the kernel
+    unconditionally should pad to block multiples first
+    (``core.backend.PallasBackend`` does exactly that)."""
+    if quantize not in ("none", "int8"):
+        raise ValueError(f"quantize={quantize!r} not supported "
+                         f"(expected 'none' or 'int8'; int4 packing is a "
+                         f"documented future extension)")
     B = codes.shape[0]
-    d_c = codebooks.shape[2]
-    if use_kernel and not _aligned(B, d_c, block_b, block_d):
-        if not _warned_fallback:
-            _warned_fallback = True
-            warnings.warn(
-                f"hash_decode: shapes B={B}, d_c={d_c} not tileable with "
-                f"blocks ({block_b}, {block_d}); falling back to the jnp "
-                f"reference path (pad inputs, e.g. via "
-                f"repro.core.backend.PallasBackend, to run the kernel)",
-                stacklevel=2)
-        use_kernel = False
-    return _hash_decode(codes, codebooks, w0, block_b, block_d, interpret, use_kernel)
+    m, c, d_c = codebooks.shape
+    if use_kernel:
+        reasons = _fallback_reasons(B, d_c, block_b, block_d, c=c, m=m,
+                                    quantized=(quantize == "int8"))
+        if reasons:
+            reason = "+".join(reasons)
+            key = (B, d_c, reason)
+            if key not in _warned_fallback:
+                _warned_fallback.add(key)
+                warnings.warn(
+                    f"hash_decode: shapes B={B}, d_c={d_c} not tileable with "
+                    f"blocks ({block_b}, {block_d}) [{reason}]; falling back "
+                    f"to the jnp reference path (pad inputs, e.g. via "
+                    f"repro.core.backend.PallasBackend, to run the kernel)",
+                    stacklevel=2)
+            use_kernel = False
+    if quantize == "int8":
+        return _hash_decode_int8(codes, codebooks, w0, block_b, block_d,
+                                 interpret, use_kernel)
+    return _hash_decode(codes, codebooks, w0, block_b, block_d, interpret,
+                        use_kernel)

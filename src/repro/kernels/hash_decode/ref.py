@@ -3,6 +3,11 @@
 Semantics: codes (B, m) int32 in [0, c) index m codebooks (m, c, d_c);
 retrieved vectors are summed; optional elementwise rescale by w0 (the light
 decoder's trainable vector).  Output (B, d_c) in f32.
+
+With ``scales`` (m, c) the codebooks are int8 absmax-quantized values and
+the oracle dequantizes before the contraction — element-for-element the
+same products as the fused kernel's scaled-one-hot path (each dot row has
+exactly one nonzero, so ``onehot @ (q · s) == (onehot · s) @ q``).
 """
 
 from __future__ import annotations
@@ -13,12 +18,14 @@ import jax.numpy as jnp
 
 
 def hash_decode_ref(codes: jnp.ndarray, codebooks: jnp.ndarray,
-                    w0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                    w0: Optional[jnp.ndarray] = None,
+                    scales: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     m, c, d_c = codebooks.shape
+    cb = codebooks.astype(jnp.float32)
+    if scales is not None:
+        cb = cb * scales.astype(jnp.float32)[:, :, None]
     onehot = (codes[:, :, None] == jnp.arange(c)[None, None, :])
-    out = jnp.einsum(
-        "bmc,mcd->bd", onehot.astype(jnp.float32), codebooks.astype(jnp.float32)
-    )
+    out = jnp.einsum("bmc,mcd->bd", onehot.astype(jnp.float32), cb)
     if w0 is not None:
         out = out * w0.astype(jnp.float32)[None, :]
     return out

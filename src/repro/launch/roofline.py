@@ -201,6 +201,79 @@ def model_flops(cfg, shape, n_chips: int) -> float:
     return total / n_chips
 
 
+# ---------------------------------------------------------------------------
+# fused hash-decode roofline (kernels.hash_decode, ISSUE 6)
+# ---------------------------------------------------------------------------
+
+# Storage bytes per codebook element by decode precision policy
+# (core.backend.MixedPrecisionPolicy): int8 is the quantized value byte —
+# its f32 absmax scales are accounted separately (one per (m, c) codebook
+# row, amortised over d_c).
+DECODE_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def decode_hbm_bytes(B: int, c: int, m: int, d_c: int,
+                     dtype: str = "float32", w0: bool = False) -> Dict[str, float]:
+    """Modeled per-call HBM traffic of one fused hash-decode forward.
+
+    The kernel reads each operand exactly once (codes and codebooks are
+    grid-resident blocks, the output is written once), so the model is the
+    sum of operand sizes — the best case any schedule can hit, which is
+    what a roofline needs:
+
+      codes      B·m·4              (int32)
+      codebooks  m·c·d_c·bytes(dtype)
+      scales     m·c·4              (int8 only: f32 absmax per codebook row)
+      w0         d_c·bytes(dtype)   (light variant only)
+      out        B·d_c·4            (f32 accumulator result)
+    """
+    db = DECODE_DTYPE_BYTES[dtype]
+    parts = {
+        "codes": B * m * 4.0,
+        "codebooks": float(m * c * d_c * db),
+        "scales": m * c * 4.0 if dtype == "int8" else 0.0,
+        "w0": float(d_c * db) if w0 else 0.0,
+        "out": B * d_c * 4.0,
+    }
+    parts["total"] = sum(parts.values())
+    return parts
+
+
+def decode_roofline(B: int, c: int, m: int, d_c: int, dtype: str = "float32",
+                    w0: bool = False,
+                    measured_us: Optional[float] = None) -> Dict[str, float]:
+    """Roofline terms for the fused hash-decode at one shape/dtype.
+
+    FLOPs use the kernel's MXU formulation (m one-hot × codebook-panel
+    matmuls): 2·B·m·c·d_c.  ``step_us`` is the modeled per-call floor
+    ``max(compute, memory)``; ``roofline_fraction`` is the fraction of the
+    peak-FLOP/s roofline that floor achieves (memory-bound shapes sit below
+    1.0 by exactly their arithmetic-intensity deficit).  With a
+    ``measured_us`` wall time, ``achieved_vs_roofline = step_us /
+    measured_us`` — only meaningful for ``mode: native`` timings; interpret
+    mode timings are a semantics check, which is why every bench entry
+    carries its mode."""
+    bytes_ = decode_hbm_bytes(B, c, m, d_c, dtype, w0=w0)
+    flops = 2.0 * B * m * c * d_c
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_["total"] / HBM_BW
+    step_s = max(compute_s, memory_s)
+    out = {
+        "flops": flops,
+        "hbm_bytes": bytes_["total"],
+        "hbm_bytes_codebooks": bytes_["codebooks"] + bytes_["scales"],
+        "arithmetic_intensity": flops / bytes_["total"],
+        "compute_us": compute_s * 1e6,
+        "memory_us": memory_s * 1e6,
+        "step_us": step_s * 1e6,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "roofline_fraction": flops / (PEAK_FLOPS_BF16 * step_s),
+    }
+    if measured_us is not None:
+        out["achieved_vs_roofline"] = out["step_us"] / max(measured_us, 1e-9)
+    return out
+
+
 def calibrate_cost_analysis(mesh) -> float:
     """Compiles a known matmul sharded over the mesh and returns
     reported_flops / per_chip_flops — ≈1.0 when cost_analysis is per-chip."""

@@ -285,7 +285,8 @@ def frontier_batch_shardings(batch, mesh: Mesh, axis: Optional[str] = None):
                 index_maps=tuple(rep for _ in v.index_maps),
                 n_unique=rep,
                 valid=None if v.valid is None else rows(v.valid),
-                plan=None if v.plan is None else jax.tree.map(rows, v.plan))
+                plan=None if v.plan is None else jax.tree.map(rows, v.plan),
+                n_decode=v.n_decode)
         return jax.tree.map(lambda _: rep, v)
 
     return {key: fn(v) for key, v in batch.items()}

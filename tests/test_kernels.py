@@ -1,5 +1,7 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,7 @@ from repro.core import lsh as core_lsh
 from repro.kernels.flash_attention import flash_attention, mha_ref
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 from repro.kernels.hash_decode import hash_decode, hash_decode_ref
+from repro.kernels.hash_decode import ops as hd_ops
 from repro.kernels.lsh_encode.kernel import lsh_encode_word
 from repro.kernels.lsh_encode.ops import lsh_encode_packed
 from repro.kernels.lsh_encode.ref import lsh_encode_word_ref
@@ -58,6 +61,89 @@ def test_hash_decode_unaligned_falls_back():
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(hash_decode_ref(codes, cb, None)),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantize", ["none", "int8"])
+def test_hash_decode_unaligned_backward(quantize):
+    """The fallback path must keep the custom VJP: unaligned shapes
+    (B=100, d_c=96 — neither sublane- nor lane-tileable) take the jnp
+    reference forward, and gradients must still match grad-of-ref."""
+    key = jax.random.PRNGKey(5)
+    codes = jax.random.randint(key, (100, 8), 0, 16)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 96))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (96,))
+
+    def ref_loss(cb, w0):
+        if quantize == "int8":
+            cb = hd_ops.quantize_dequantize(cb)
+        return (hash_decode_ref(codes, cb, w0) ** 2).sum()
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        gk = jax.grad(lambda cb, w0: (hash_decode(
+            codes, cb, w0, interpret=True, quantize=quantize) ** 2).sum(),
+            argnums=(0, 1))(cb, w0)
+    gr = jax.grad(ref_loss, argnums=(0, 1))(cb, w0)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_hash_decode_fallback_warns_once_per_shape_and_reason():
+    hd_ops.reset_fallback_warnings()
+    codes = jax.random.randint(jax.random.PRNGKey(0), (100, 8), 0, 16)
+    cb = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 96))
+    with pytest.warns(UserWarning, match="falling back"):
+        hash_decode(codes, cb, None, interpret=True)
+    # same (shape, reason): silent on repeat
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        hash_decode(codes, cb, None, interpret=True)
+    # a NEW reason on the same shape must not be silenced by the earlier
+    # one: int8 adds the scales-tile requirement (m=8 ok, c=16 < 128 lane)
+    with pytest.warns(UserWarning, match="scales-tile"):
+        hash_decode(codes, cb, None, interpret=True, quantize="int8")
+    # the reset hook restores a clean slate
+    hd_ops.reset_fallback_warnings()
+    with pytest.warns(UserWarning, match="falling back"):
+        hash_decode(codes, cb, None, interpret=True)
+
+
+@pytest.mark.parametrize("B,m,c,d_c", [
+    (256, 16, 256, 512),   # paper §5.3 shape, scales (m, c) tileable
+    (128, 8, 128, 128),
+])
+def test_hash_decode_int8_kernel_matches_ref(B, m, c, d_c):
+    """Fused int8 dequant in the kernel == quantize-dequantize-then-decode:
+    the scaled-one-hot contraction performs the same f32 products, so the
+    match is exact, not approximate."""
+    key = jax.random.PRNGKey(11)
+    codes = jax.random.randint(key, (B, m), 0, c)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (m, c, d_c))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (d_c,))
+    for w in (None, w0):
+        out = hash_decode(codes, cb, w, interpret=True,
+                          block_b=128, block_d=128, quantize="int8")
+        ref = hash_decode_ref(codes, hd_ops.quantize_dequantize(cb), w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_quantize_codebooks_roundtrip_bound():
+    """Absmax int8: dequant error per element <= scale/2, scale = absmax/127,
+    and all-zero code vectors reconstruct exactly (scale forced to 1)."""
+    cb = jax.random.normal(jax.random.PRNGKey(4), (4, 8, 64))
+    cb = cb.at[0, 0].set(0.0)
+    q, scales = hd_ops.quantize_codebooks(cb)
+    assert q.dtype == jnp.int8 and scales.shape == (4, 8)
+    deq = hd_ops.dequantize_codebooks(q, scales)
+    err = np.abs(np.asarray(deq - cb))
+    bound = np.asarray(scales)[:, :, None] / 2 + 1e-7
+    assert (err <= bound).all()
+    np.testing.assert_array_equal(np.asarray(deq[0, 0]), np.zeros(64))
+    # straight-through backward: identity to the float masters
+    g = jax.grad(lambda cb: hd_ops.quantize_dequantize(cb).sum())(cb)
+    np.testing.assert_array_equal(np.asarray(g), np.ones_like(np.asarray(cb)))
 
 
 # ---------------- lsh_encode ----------------

@@ -1,0 +1,139 @@
+"""Plan-ahead miss partition for cached training (ISSUE 6 satellite).
+
+``MissPlanningSource`` permutes each frontier miss-first against a host-side
+``HostCacheShadow`` before the batch reaches the jitted step, so the cached
+train step decodes only (predicted) misses.  The shadow replays the device
+cache's value-independent bookkeeping exactly, so:
+
+  * losses are bitwise-identical to the plain cached run (the permutation
+    is undone by the remapped index_maps; the decode covers every miss),
+  * hit/miss counters match the plain run,
+  * the shadow equals the device ``CacheState`` bookkeeping field-for-field
+    after any number of steps, and
+  * checkpoint resume restores the shadow (or re-anchors it from the
+    restored cache) and continues the exact sequence.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.graph.engine import MissPlanningSource
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.graph.sampler import FrontierBatch
+
+N = 1200
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return GraphSource(kind="powerlaw", seed=0, n_nodes=N, n_classes=8).build()
+
+
+def _spec(**emb):
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N, n_classes=8),
+        model=paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5),
+        batch_size=64, pad_to=128, log_every=1, prefetch_depth=2,
+    )
+    return spec.with_updates(c=16, m=8, d_c=128, d_m=64, **emb)
+
+
+def _run(spec, steps, graph):
+    rt = GraphRuntime.from_spec(spec, graph=graph)
+    losses = []
+    try:
+        rt.train(steps, on_metrics=lambda s, m: losses.append(float(m["loss"])))
+        state = rt.state
+        src = getattr(rt.data_iter, "source", rt.data_iter)
+    finally:
+        rt.close()
+    return losses, state, src
+
+
+@pytest.mark.parametrize("staleness", [0, 2])
+def test_planned_run_bitwise_matches_plain_cached(graph, staleness):
+    base = _spec(cache_capacity=512, cache_staleness=staleness)
+    plan = base.with_updates(cache_plan_misses=True)
+    l0, s0, _ = _run(base, 6, graph)
+    l1, s1, src = _run(plan, 6, graph)
+    assert l0 == l1, f"staleness={staleness}: losses diverge"
+    c0, c1 = s0["cache"], s1["cache"]
+    assert int(c0.hits) == int(c1.hits)
+    assert int(c0.misses) == int(c1.misses)
+    # host shadow == device cache bookkeeping, field for field
+    sh = src.shadow
+    np.testing.assert_array_equal(sh.node_ids, np.asarray(c1.node_ids))
+    np.testing.assert_array_equal(sh.version, np.asarray(c1.version))
+    np.testing.assert_array_equal(sh.last_used, np.asarray(c1.last_used))
+    assert sh.version_counter == int(c1.version_counter)
+    assert sh.clock == int(c1.clock)
+
+
+def test_planned_batches_carry_static_miss_count(graph):
+    spec = _spec(cache_capacity=512, cache_staleness=2,
+                 cache_plan_misses=True)
+    rt = GraphRuntime.from_spec(spec, graph=graph)
+    try:
+        seen = set()
+        for _ in range(4):
+            fb = rt.data_iter.next_batch()["frontier"]
+            assert fb.n_decode is not None
+            assert fb.valid is not None
+            U = int(fb.unique.shape[0])
+            assert 0 <= fb.n_decode <= U
+            seen.add(fb.n_decode)
+        # n_decode is bucketed (pad_to doubling) so steady-state training
+        # reuses a handful of jit shapes rather than one per miss count
+        assert all(n == 0 or n % rt.spec.pad_to == 0 or n == U for n in seen)
+    finally:
+        rt.close()
+
+
+def test_resume_restores_shadow_and_sequence(graph, tmp_path):
+    spec = _spec(cache_capacity=512, cache_staleness=2,
+                 cache_plan_misses=True)
+    spec = spec.with_updates(ckpt_dir=os.fspath(tmp_path / "ck"),
+                             ckpt_every=3)
+    _run(spec, 6, graph)
+
+    rt = GraphRuntime.resume(os.fspath(tmp_path / "ck"))
+    resumed = []
+    try:
+        rt.train(9, on_metrics=lambda s, m: resumed.append(float(m["loss"])))
+    finally:
+        rt.close()
+
+    straight, _, _ = _run(_spec(cache_capacity=512, cache_staleness=2,
+                                cache_plan_misses=True), 9, graph)
+    assert resumed == straight[6:], (resumed, straight)
+
+
+class _PlannedStub:
+    """Source emitting an owner-planned batch (plan already attached)."""
+
+    def next_batch(self):
+        fb = FrontierBatch(unique=np.zeros(4, np.int32),
+                           index_maps=(np.zeros(4, np.int32),),
+                           n_unique=4, valid=None, plan=object())
+        return {"frontier": fb}
+
+
+def test_missplanning_source_rejects_owner_planned_batches():
+    src = MissPlanningSource(_PlannedStub(), capacity=64)
+    with pytest.raises(ValueError, match="plan"):
+        src.next_batch()
+
+
+def test_runtime_validates_plan_misses_spec(graph):
+    with pytest.raises(ValueError, match="cache_capacity"):
+        GraphRuntime.from_spec(_spec(cache_plan_misses=True), graph=graph)
+    # the miss-first permutation needs the dedup frontier layout (and is
+    # rejected for n_shards > 1 by the same branch)
+    with pytest.raises(ValueError, match="single-shard dedup"):
+        GraphRuntime.from_spec(
+            _spec(cache_capacity=512, cache_plan_misses=True)
+            .with_updates(dedup=False),
+            graph=graph)

@@ -1,0 +1,169 @@
+"""Mixed-precision + quantized decode (ISSUE 6): policy validation, the
+per-backend dtype contract, fused-int8 parity between backends, and the
+end-to-end acceptance bar — bf16 / int8 step-0 loss within the documented
+``core.backend.DRIFT_BOUNDS`` on EVERY decode backend."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.core.backend import (
+    CachedDecodeBackend,
+    DEFAULT_POLICY,
+    DRIFT_BOUNDS,
+    MixedPrecisionPolicy,
+    get_backend,
+)
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+
+# ---------------- policy object ----------------
+
+
+def test_policy_rejects_unknown_quantize():
+    with pytest.raises(ValueError, match="quantize"):
+        MixedPrecisionPolicy(quantize="int4")
+
+
+def test_policy_rejects_non_f32_reduce():
+    with pytest.raises(ValueError, match="reduce_dtype"):
+        MixedPrecisionPolicy(reduce_dtype="bfloat16")
+
+
+def test_default_policy_is_noop():
+    assert DEFAULT_POLICY.param_dtype is None
+    assert DEFAULT_POLICY.quantize == "none"
+    assert DEFAULT_POLICY.reduce_dtype == "float32"
+
+
+# ---------------- dtype contract, every backend ----------------
+
+@pytest.mark.parametrize("name", [
+    "gather", "onehot", "pallas", "sharded:gather", "owner:gather"])
+def test_dtype_contract_every_backend(name):
+    pol = MixedPrecisionPolicy(param_dtype="bfloat16",
+                               compute_dtype="bfloat16", quantize="int8")
+    be = get_backend(name, interpret=True, policy=pol)
+    c = be.dtype_contract()
+    assert c["storage"] == "int8 values + float32 scales"
+    assert c["accumulate"] == "float32"
+    assert c["output"] == "float32"
+    # the f32-storage contract states the param dtype verbatim
+    c32 = get_backend(name, interpret=True, policy=MixedPrecisionPolicy(
+        param_dtype="float32", compute_dtype="float32")).dtype_contract()
+    assert c32["storage"] == "float32"
+    assert c32["accumulate"] == "float32"
+
+
+def test_cached_backend_contract_names_base():
+    pol = MixedPrecisionPolicy(param_dtype="bfloat16", quantize="int8")
+    base = get_backend("gather", policy=pol)
+    c = CachedDecodeBackend.dtype_contract(base)
+    assert c["base"] == "gather"
+    assert c["accumulate"].startswith("float32")
+    assert c["output"] == "float32"
+
+
+# ---------------- int8 parity between backends ----------------
+
+
+def test_int8_decode_parity_across_backends():
+    """All three backends decode the SAME dequantized values (the shared
+    straight-through ``quantize_dequantize`` / the kernel's fused scales) —
+    only the m-term summation order differs (sequential gather vs matmul
+    contraction), so outputs agree to f32 accumulation-order tolerance."""
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (256, 8), 0, 128)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 128, 128))
+    pol = MixedPrecisionPolicy(quantize="int8")
+    out = {n: np.asarray(get_backend(n, interpret=True, policy=pol)
+                         .decode(codes, cb))
+           for n in ("gather", "onehot", "pallas")}
+    np.testing.assert_allclose(out["gather"], out["onehot"],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out["pallas"], out["gather"],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_param_dtype_casts_storage():
+    """param_dtype=bfloat16 must decode exactly what a pre-cast bf16
+    codebook would, and stay within the documented bf16 drift bound."""
+    key = jax.random.PRNGKey(1)
+    codes = jax.random.randint(key, (128, 8), 0, 16)
+    cb = jax.random.normal(jax.random.fold_in(key, 1), (8, 16, 128))
+    be = get_backend("gather", policy=MixedPrecisionPolicy(
+        param_dtype="bfloat16"))
+    out = np.asarray(be.decode(codes, cb))
+    pre = np.asarray(get_backend("gather").decode(
+        codes, cb.astype(jnp.bfloat16)))
+    np.testing.assert_array_equal(out, pre)
+    f32 = np.asarray(get_backend("gather").decode(codes, cb))
+    drift = np.abs(out - f32).max() / max(np.abs(f32).max(), 1e-12)
+    assert drift <= DRIFT_BOUNDS["bfloat16"], drift
+
+
+# ---------------- end-to-end drift: every backend ----------------
+
+N_NODES, N_CLASSES = 600, 8
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                       n_classes=N_CLASSES).build()
+
+
+def _spec(lookup_impl, n_shards=1, **emb):
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=N_CLASSES),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                               fanout=3),
+        batch_size=32, pad_to=128, n_shards=n_shards, log_every=1,
+        data_seed=1, prefetch_depth=0,
+    )
+    return spec.with_updates(c=16, m=8, d_c=128, d_m=32,
+                             lookup_impl=lookup_impl, **emb)
+
+
+def _step0_loss(graph, lookup_impl, n_shards=1, **emb):
+    rt = GraphRuntime.from_spec(_spec(lookup_impl, n_shards, **emb),
+                                graph=graph)
+    losses = []
+    try:
+        rt.train(1, on_metrics=lambda s, m: losses.append(float(m["loss"])))
+    finally:
+        rt.close()
+    assert losses and np.isfinite(losses[0])
+    return losses[0]
+
+
+def _assert_drift(graph, lookup_impl, n_shards=1, **emb):
+    base = _step0_loss(graph, lookup_impl, n_shards, **emb)
+    for variant, bound_key in ((dict(param_dtype="bfloat16"), "bfloat16"),
+                               (dict(quantize="int8"), "int8")):
+        loss = _step0_loss(graph, lookup_impl, n_shards, **emb, **variant)
+        drift = abs(loss - base) / max(abs(base), 1e-12)
+        assert drift <= DRIFT_BOUNDS[bound_key], (
+            f"{lookup_impl} {variant}: step-0 loss drift {drift:.4g} "
+            f"exceeds DRIFT_BOUNDS[{bound_key!r}]={DRIFT_BOUNDS[bound_key]}")
+
+
+@pytest.mark.parametrize("impl", ["gather", "onehot", "pallas"])
+def test_step0_loss_drift_within_bounds(graph, impl):
+    _assert_drift(graph, impl)
+
+
+def test_step0_loss_drift_within_bounds_cached(graph):
+    _assert_drift(graph, "gather", cache_capacity=256, cache_staleness=2)
+
+
+@pytest.mark.multidevice(n=4)
+def test_step0_loss_drift_within_bounds_sharded(graph):
+    _assert_drift(graph, "sharded:gather", n_shards=4)
+
+
+@pytest.mark.multidevice(n=4)
+def test_step0_loss_drift_within_bounds_owner(graph):
+    _assert_drift(graph, "owner:gather", n_shards=4)

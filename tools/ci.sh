@@ -5,7 +5,11 @@
 #   tools/ci.sh --bench        ... plus the benchmark suite in --smoke mode
 #                              (2 steps per benchmark: exercises every
 #                              module's code path so benchmarks can't
-#                              silently rot)
+#                              silently rot — including the fused per-dtype
+#                              decode, which raises if int8/bf16 drift
+#                              exceeds DRIFT_BOUNDS), and a gate asserting
+#                              the committed BENCH_*.json artifacts carry
+#                              mode + dtype on every entry
 #   tools/ci.sh --bench-only   import gate + benchmark smoke, WITHOUT the
 #                              tier-1 pytest — the CI matrix runs tier-1 in
 #                              its own leg, so the bench leg shouldn't pay
@@ -91,6 +95,42 @@ fi
 if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== [extra] benchmark smoke =="
     python -m benchmarks.run --smoke
+    echo "== [extra] fused-decode precision gate (int8 vs f32 + entry keys) =="
+    python - <<'PY'
+# The kernels_micro smoke above already ran the fused per-dtype decode and
+# raised if int8/bf16 drift exceeded core.backend.DRIFT_BOUNDS or the int8
+# codebook byte reduction fell under 3.5x.  This gate additionally pins the
+# committed artifacts: every BENCH entry must carry mode + dtype keys
+# (benchmarks.common.bench_entry is the only sanctioned writer).
+import json
+from pathlib import Path
+
+root = Path(".")
+checked = 0
+for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json"):
+    path = root / name
+    if not path.exists():
+        continue
+    doc = json.loads(path.read_text())
+    if name == "BENCH_kernels.json":
+        entries = doc["fused_hash_decode"]["entries"]
+        dtypes = {e["dtype"] for e in entries}
+        assert {"float32", "bfloat16", "int8"} <= dtypes, dtypes
+        red = doc["fused_hash_decode"]["int8_codebook_byte_reduction_vs_f32"]
+        assert red >= 3.5, f"int8 byte reduction {red} < 3.5x"
+        for e in entries:
+            assert e["modeled"]["hbm_bytes"] > 0, e
+    elif name == "BENCH_decode.json":
+        entries = list(doc["backends"].values())
+    else:
+        entries = [r for r in doc.get("runs", {}).values()
+                   if isinstance(r, dict)]
+    for e in entries:
+        assert e.get("mode") in ("native", "interpret"), (name, e)
+        assert isinstance(e.get("dtype"), str) and e["dtype"], (name, e)
+        checked += 1
+print(f"bench artifact gate OK ({checked} entries carry mode+dtype)")
+PY
 fi
 
 if [[ "$RUN_EXAMPLES" == 1 ]]; then
