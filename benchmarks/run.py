@@ -7,6 +7,7 @@
 #   decode_backends      ISSUE 2   — gather/onehot/pallas/cached frontier decode
 #   sharded_pipeline     ISSUE 3   — 1- vs 4-shard streaming step (8 forced devices)
 #   serving_gnn          ISSUE 4   — GraphRuntime serve(): miss-only cached decode
+#   serving_load         ISSUE 7   — continuous batching under Zipfian load
 #   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
@@ -31,6 +32,7 @@ MODULES = [
     "decode_backends",
     "sharded_pipeline",
     "serving_gnn",
+    "serving_load",
     "kernels_micro",
     "roofline_report",
     "fig1_reconstruction",

@@ -7,8 +7,9 @@ miss-only cached decode, fixed-shape jitted forward.
 
 Reported axes:
 
-  * ``request``        steady-state latency per request batch (first
-                       request pays compile + a cold cache and is excluded);
+  * ``request``        steady-state latency per request batch (a warmup
+                       request pays compile + the cold cache, then
+                       ``engine.reset()`` opens the measured window);
   * ``rows_decoded``   decoder rows actually paid per request vs the full
                        frontier — the hot-node-cache win at serving time,
                        where frozen params mean cached embeddings never go
@@ -38,13 +39,16 @@ SERVE_BATCH = 256
 
 def _request_loop(engine, n_req: int, seed: int):
     rng = np.random.default_rng(seed)
-    t0, decoded = None, []
-    for i in range(n_req):
+    # warmup request pays compile + the cold cache; reset() zeroes the
+    # counters so the measured window is steady state only (the compile
+    # bill stays visible as stats()["compile_count"])
+    engine.serve(rng.integers(0, N_NODES, SERVE_BATCH))
+    engine.reset()
+    decoded, t0 = [], time.perf_counter()
+    for _ in range(n_req):
         res = engine.serve(rng.integers(0, N_NODES, SERVE_BATCH))
         decoded.append(res.rows_decoded)
-        if i == 0:                  # first request pays compile + cold cache
-            t0 = time.perf_counter()
-    per_req = (time.perf_counter() - t0) / max(n_req - 1, 1) * 1e6
+    per_req = (time.perf_counter() - t0) / max(n_req, 1) * 1e6
     return per_req, decoded, res
 
 
@@ -69,9 +73,9 @@ def run():
     emit("serving_gnn/cached/request", t_cached,
          f"rows_decoded_steady={last.rows_decoded}/{last.rows_total} "
          f"hit_rate={stats.get('hit_rate', 0.0):.2f} val_acc={acc:.3f}")
-    emit("serving_gnn/cached/rows_decoded",
-         float(np.mean(decoded[1:]) if len(decoded) > 1 else decoded[0]),
-         f"first_request={decoded[0]} (cold cache decodes ~everything)")
+    emit("serving_gnn/cached/rows_decoded", float(np.mean(decoded)),
+         f"steady-state mean over {n_req} requests "
+         f"(warmup excluded via reset(), compiles={stats['compile_count']})")
 
     uncached = rt.serve(serve_batch=SERVE_BATCH, cache_capacity=0)
     t_unc, decoded_unc, last_unc = _request_loop(uncached, n_req, seed=7)

@@ -1,0 +1,230 @@
+"""Zipfian concurrent-load benchmark for the serving tier (ISSUE 7).
+
+Drives the SAME pre-generated request stream through two serving legs:
+
+  * ``sequential``  the bare ``GraphInferenceEngine``, one request at a
+                    time — the PR-4 serving story (per-request dedup +
+                    shared hot cache + miss-only decode);
+  * ``batched``     N closed-loop client threads submitting concurrently
+                    through ``ServingBatcher`` — microbatch coalescing
+                    adds the third dedup tier (cross-request union of
+                    misses decodes once per microbatch).
+
+Requests are Zipf(``ZIPF_EXPONENT``)-skewed over a seeded permutation of
+the node ids — the power-law access pattern the paper's compression
+targets — so concurrent requests share hub nodes and cross-request dedup
+has something to collapse.  Both legs warm up on a separate stream and
+``reset()`` before measuring, so the reported window is steady state (the
+compile bill stays visible as ``compile_count``).
+
+Emits the usual CSV rows AND writes ``BENCH_serving.json`` (never under
+--smoke): p50/p95/p99 client-observed latency, sustained QPS, and
+rows-decoded-per-request per leg, plus ``bitwise_equal_at_staleness0`` —
+every batched response is compared bitwise against the sequential leg's
+response for the same request (content-keyed frontiers + row-pure decode
+make coalescing invisible to clients).  ``tools/ci.sh --bench`` gates the
+committed artifact: mode+dtype on every entry, batched strictly fewer
+rows per request than sequential, bitwise flag true.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import bench_entry, emit, steps
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.optim import AdamWConfig
+from repro.serving import BatchingSpec, ServingBatcher
+
+N_NODES = 8000
+N_CLASSES = 8
+SERVE_BATCH = 256
+ZIPF_EXPONENT = 1.1
+N_CLIENTS = 8
+MAX_BATCH = 8
+# deliberately smaller than the graph (the engine default would cover all
+# 8000 nodes here): the Zipf head lives in the cache and the TAIL keeps
+# missing, so the benchmark separates what the hot cache absorbs from what
+# cross-request dedup collapses
+CACHE_CAPACITY = 2048
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+
+def zipfian_requests(n_req: int, seed: int):
+    """``n_req`` request batches of ``SERVE_BATCH`` node ids drawn from a
+    Zipf(``ZIPF_EXPONENT``) distribution over a seeded permutation of the
+    graph — rank 1 is a random hub, not node 0, so the skew doesn't alias
+    the generator's id layout."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, N_NODES + 1, dtype=np.float64)
+    p = ranks ** -ZIPF_EXPONENT
+    p /= p.sum()
+    perm = rng.permutation(N_NODES).astype(np.int32)
+    return [perm[rng.choice(N_NODES, size=SERVE_BATCH, p=p)]
+            for _ in range(n_req)]
+
+
+def _warmed(engine, warmup_stream):
+    for req in warmup_stream:
+        engine.serve(req)
+    engine.reset()
+    return engine
+
+
+def _sequential_leg(engine, requests):
+    lat, results = [], []
+    t0 = time.perf_counter()
+    for req in requests:
+        t = time.perf_counter()
+        results.append(engine.serve(req))
+        lat.append(time.perf_counter() - t)
+    elapsed = time.perf_counter() - t0
+    return np.asarray(lat), elapsed, results
+
+
+def _batched_leg(batcher, requests, n_clients: int):
+    """Closed-loop clients: each thread serves its round-robin share of the
+    stream, one outstanding request at a time, all released together."""
+    lat = np.zeros(len(requests))
+    results = [None] * len(requests)
+    barrier = threading.Barrier(n_clients + 1)
+
+    def client(cid: int):
+        barrier.wait()
+        for i in range(cid, len(requests), n_clients):
+            t = time.perf_counter()
+            results[i] = batcher.serve(requests[i])
+            lat[i] = time.perf_counter() - t
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    return lat, elapsed, results
+
+
+def _leg_entry(name: str, lat_s, elapsed: float, stats, dtype: str) -> dict:
+    lat_us = np.asarray(lat_s) * 1e6
+    return bench_entry(
+        name, mode="native", dtype=dtype,
+        p50_us=float(np.percentile(lat_us, 50)),
+        p95_us=float(np.percentile(lat_us, 95)),
+        p99_us=float(np.percentile(lat_us, 99)),
+        qps=len(lat_us) / max(elapsed, 1e-9),
+        requests=len(lat_us),
+        rows_decoded_per_request=stats["rows_decoded_per_request"],
+        hit_rate=stats.get("hit_rate", 0.0),
+        compile_count=stats["compile_count"])
+
+
+def run():
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=N_CLASSES, avg_degree=10, homophily=0.9),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                               kind="hash_full", fanout=10),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=256, data_seed=1, prefetch_depth=2,
+    ).with_updates(c=16, m=8, d_c=128, d_m=64)
+    dtype = spec.model.embedding_config().compute_dtype
+
+    rt = GraphRuntime.from_spec(spec)
+    rt.train(steps(30))
+
+    n_req = steps(96, smoke_n=4)
+    n_clients = min(N_CLIENTS, n_req)
+    requests = zipfian_requests(n_req, seed=23)
+    warmup = zipfian_requests(steps(12), seed=24)
+
+    # -- sequential leg ---------------------------------------------------
+    seq_engine = _warmed(
+        rt.serve(serve_batch=SERVE_BATCH, cache_capacity=CACHE_CAPACITY),
+        warmup)
+    seq_lat, seq_elapsed, seq_results = _sequential_leg(seq_engine, requests)
+    seq_stats = seq_engine.stats()
+    seq = _leg_entry("serving_load/sequential", seq_lat, seq_elapsed,
+                     seq_stats, dtype)
+    emit("serving_load/sequential/p50", seq["p50_us"],
+         f"p99={seq['p99_us']:.0f}us qps={seq['qps']:.1f} "
+         f"rows/req={seq['rows_decoded_per_request']:.0f} "
+         f"hit_rate={seq['hit_rate']:.2f}")
+
+    # -- batched leg (fresh engine, identical construction) ---------------
+    bat_engine = _warmed(
+        rt.serve(serve_batch=SERVE_BATCH, cache_capacity=CACHE_CAPACITY,
+                 max_coalesce=MAX_BATCH), warmup)
+    bspec = BatchingSpec(max_batch=min(MAX_BATCH, n_clients),
+                         max_delay_ms=2.0, queue_depth=64)
+    with ServingBatcher(bat_engine, bspec) as batcher:
+        # warm the coalesced request-bucket shapes too (they only exist
+        # under concurrency), then reopen the measured window
+        _batched_leg(batcher, warmup, n_clients)
+        bat_engine.reset()
+        bat_lat, bat_elapsed, bat_results = _batched_leg(
+            batcher, requests, n_clients)
+        bat_stats = bat_engine.stats()
+        coalesce = batcher.stats()
+    bat = _leg_entry("serving_load/batched", bat_lat, bat_elapsed,
+                     bat_stats, dtype)
+    bat["mean_coalesced"] = coalesce["mean_coalesced"]
+    emit("serving_load/batched/p50", bat["p50_us"],
+         f"p99={bat['p99_us']:.0f}us qps={bat['qps']:.1f} "
+         f"rows/req={bat['rows_decoded_per_request']:.0f} "
+         f"hit_rate={bat['hit_rate']:.2f} "
+         f"coalesce={coalesce['mean_coalesced']:.1f}")
+    rt.close()
+
+    # -- matched correctness: batched bitwise == sequential ---------------
+    for i, (s, b) in enumerate(zip(seq_results, bat_results)):
+        if not (np.array_equal(s.embeddings, b.embeddings)
+                and np.array_equal(s.logits, b.logits)):
+            raise AssertionError(
+                f"request {i}: batched response != sequential (staleness-0 "
+                f"serving must be bitwise ordering-independent)")
+    emit("serving_load/bitwise_equal", 0.0,
+         f"all {n_req} batched responses bitwise == sequential")
+
+    if common.SMOKE:
+        # 4 requests of coalescing is a code-path check, not a measurement
+        # or a dedup guarantee; never overwrite the committed datapoint
+        print(f"# smoke: skipping {OUT_PATH.name} write")
+        return
+
+    if not (bat["rows_decoded_per_request"]
+            < seq["rows_decoded_per_request"]):
+        raise AssertionError(
+            f"cross-request dedup must decode strictly fewer rows/request: "
+            f"batched {bat['rows_decoded_per_request']:.0f} >= sequential "
+            f"{seq['rows_decoded_per_request']:.0f}")
+
+    report = {
+        "workload": {
+            "n_nodes": N_NODES, "serve_batch": SERVE_BATCH,
+            "zipf_exponent": ZIPF_EXPONENT, "n_requests": n_req,
+            "n_clients": n_clients, "max_batch": bspec.max_batch,
+            "max_delay_ms": bspec.max_delay_ms,
+            "fanout": list(spec.model.fanouts),
+            "cache_capacity": seq_engine.cache_capacity,
+        },
+        "bitwise_equal_at_staleness0": True,
+        "runs": {"sequential": seq, "batched": bat},
+    }
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    run()

@@ -44,6 +44,7 @@ from repro.graph.engine import (FullGraphBatch, GNNModel, PrefetchIterator,
                                 SageBatchSource, ShardedSageBatchSource)
 from repro.graph.sampler import NeighborSampler
 from repro.optim.adamw import AdamWConfig
+from repro.serving.batcher import BatchingSpec
 
 FULLGRAPH_MODELS = ("gcn", "sgc", "gin")
 
@@ -152,6 +153,9 @@ class RuntimeSpec:
     eval_batch: int = 512
     eval_seed: int = 17
     serve_batch: int = 256
+    # continuous-batching serving tier (serving.batcher); None = bare
+    # engine, a BatchingSpec makes rt.serve() return a ServingBatcher
+    batching: Optional[BatchingSpec] = None
     # pallas interpret mode; None resolves to "not on a TPU runtime"
     interpret: Optional[bool] = None
 
@@ -200,6 +204,8 @@ class RuntimeSpec:
         model = GNNConfig(**md)
         opt = AdamWConfig(**d.pop("optimizer"))
         d["split_frac"] = tuple(d["split_frac"])
+        if d.get("batching") is not None:
+            d["batching"] = BatchingSpec(**d["batching"])
         return cls(graph=graph, model=model, optimizer=opt, **d)
 
     @classmethod
@@ -537,21 +543,40 @@ class GraphRuntime:
         return np.asarray(
             self.model.apply(self.state["params"], jax.device_put(fb)))
 
-    def serve(self, **overrides):
+    def serve(self, *, batching=None, **overrides):
         """Freeze the current params into a ``GraphInferenceEngine`` (the
         GNN twin of ``serving.DecodeEngine``): batched frontier sampling,
         miss-only hot-node cached decode, fixed-shape jit.  Keyword
-        overrides are forwarded to the engine constructor."""
+        overrides are forwarded to the engine constructor.
+
+        ``batching`` selects the continuous-batching tier
+        (``serving.ServingBatcher``, see ``docs/serving.md``): ``None``
+        defers to ``spec.batching``; a ``BatchingSpec`` (or ``True`` for
+        defaults) wraps the engine in a batcher whose microbatches get
+        cross-request frontier dedup; ``False`` forces the bare engine even
+        when the spec asks for batching.  The batcher owns the engine —
+        ``close()`` it (or use it as a context manager) when done."""
         if self.fullgraph:
             raise NotImplementedError(
                 "serving is minibatched GraphSAGE only; full-graph models "
                 "evaluate via runtime.evaluate()")
         from repro.serving.gnn import GraphInferenceEngine
+        if batching is None:
+            batching = self.spec.batching
+        if batching is True:
+            batching = BatchingSpec()
         kw = dict(serve_batch=self.spec.serve_batch, pad_to=self.spec.pad_to,
                   interpret=self.interpret)
+        if batching:
+            # engine request-count buckets must admit the batcher's flushes
+            kw.setdefault("max_coalesce", batching.max_batch)
         kw.update(overrides)
-        return GraphInferenceEngine(self.cfg, self.state["params"],
-                                    self.sampler, **kw)
+        engine = GraphInferenceEngine(self.cfg, self.state["params"],
+                                      self.sampler, **kw)
+        if not batching:
+            return engine
+        from repro.serving.batcher import ServingBatcher
+        return ServingBatcher(engine, batching)
 
     def close(self) -> None:
         if hasattr(self.data_iter, "close"):

@@ -1,7 +1,9 @@
+from repro.serving.batcher import BatchingSpec, Overloaded, ServingBatcher
 from repro.serving.engine import DecodeEngine, Engine, GenerationResult
 from repro.serving.gnn import GraphInferenceEngine, GraphServeResult
 
 __all__ = [
+    "BatchingSpec", "Overloaded", "ServingBatcher",
     "DecodeEngine", "Engine", "GenerationResult",
     "GraphInferenceEngine", "GraphServeResult",
 ]

@@ -102,7 +102,11 @@ class DecodeEngine:
             tokens=np.asarray(jnp.concatenate(out, axis=1)), steps=max_new_tokens)
 
     def serve(self, requests, max_new_tokens: int = 32,
-              **kwargs) -> GenerationResult:
+              temperature: float = 0.0, seed: int = 0,
+              **_ignored) -> GenerationResult:
         """``Engine``-protocol entry point: one batch of prompts in, a
-        ``GenerationResult`` out (thin alias of ``generate``)."""
-        return self.generate(np.asarray(requests), max_new_tokens, **kwargs)
+        ``GenerationResult`` out (thin alias of ``generate``).  Unknown
+        kwargs are ignored, so protocol-level callers (the batcher, shared
+        harnesses) can pass engine-agnostic options."""
+        return self.generate(np.asarray(requests), max_new_tokens,
+                             temperature=temperature, seed=seed)

@@ -1,0 +1,336 @@
+"""Continuous-batching serving tier (ISSUE 7).
+
+Pins the contracts the batcher + cross-request dedup rest on:
+  (a) Engine-protocol conformance: ``DecodeEngine``, ``GraphInferenceEngine``
+      and a batcher-wrapped engine all pass one shared harness (serve
+      signature, result shapes, unknown-kwarg tolerance);
+  (b) stats accounting: cumulative counters, explicit ``reset()`` that
+      survives ``compile_count``, and the shape-bucketing compile bound —
+      a 100-request mixed-size stream compiles at most
+      ``len(decode_buckets())`` forwards;
+  (c) ordering independence: concurrent ``serve()`` through the batcher at
+      staleness 0 is BITWISE the same requests served sequentially, in any
+      arrival order (content-keyed frontiers + row-pure decode);
+  (d) cross-request dedup does strictly less decode work than sequential
+      serving on overlapping requests;
+  (e) backpressure: a full queue sheds loudly (``Overloaded`` with
+      retry-after) and accepted requests always complete;
+  (f) ``BatchingSpec`` rides ``RuntimeSpec`` through JSON and selects the
+      batcher in ``GraphRuntime.serve()``.
+"""
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+from repro.models import init_lm
+from repro.optim import AdamWConfig
+from repro.serving import (BatchingSpec, DecodeEngine, Engine,
+                           GenerationResult, GraphInferenceEngine,
+                           GraphServeResult, Overloaded, ServingBatcher)
+
+N = 1200
+GRAPH_SRC = GraphSource(kind="powerlaw", seed=0, n_nodes=N, n_classes=8,
+                        avg_degree=8, homophily=0.9)
+
+
+def _cfg(**emb_kw):
+    base = paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5)
+    return dataclasses.replace(base, embedding=dataclasses.replace(
+        base.embedding, c=16, m=8, d_c=64, d_m=64, lookup_impl="gather",
+        **emb_kw))
+
+
+def _spec(**kw):
+    spec = RuntimeSpec(graph=GRAPH_SRC, model=_cfg(),
+                       optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+                       batch_size=64, prefetch_depth=0, serve_batch=64)
+    return spec.with_updates(**kw) if kw else spec
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return GRAPH_SRC.build()
+
+
+@pytest.fixture(scope="module")
+def rt(graph):
+    runtime = GraphRuntime.from_spec(_spec(), graph=graph)
+    runtime.train(3)
+    yield runtime
+    runtime.close()
+
+
+def _requests(rng, n, max_b=64, overlap=None):
+    reqs = [rng.integers(0, N, size=int(rng.integers(4, max_b))
+                         ).astype(np.int32) for _ in range(n)]
+    if overlap:
+        for r in reqs[1:]:
+            r[:overlap] = reqs[0][:overlap]
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# (a) Engine protocol conformance — one harness, every engine
+# ---------------------------------------------------------------------------
+
+def _lm_engine():
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, s_max=64)
+    req = np.zeros((2, 4), np.int32)
+    def check(res):
+        assert isinstance(res, GenerationResult)
+        assert res.tokens.shape == (2, 4 + 2)
+    return eng, req, check
+
+
+def _gnn_engine(rt):
+    eng = rt.serve(serve_batch=64)
+    req = np.arange(12, dtype=np.int32)
+    def check(res):
+        assert isinstance(res, GraphServeResult)
+        assert res.embeddings.shape == (12, rt.cfg.hidden)
+        assert res.logits.shape == (12, rt.cfg.n_classes)
+        assert res.predictions.shape == (12,)
+    return eng, req, check
+
+
+def _batched_gnn_engine(rt):
+    eng, req, check = _gnn_engine(rt)
+    return ServingBatcher(eng, BatchingSpec(max_batch=4)), req, check
+
+
+@pytest.mark.parametrize("which", ["lm", "gnn", "batched_gnn"])
+def test_engine_protocol_conformance(rt, which):
+    """Every serving surface passes the same harness: isinstance of the
+    runtime-checkable protocol, ``serve(request)`` returns the right result
+    shape, and unknown kwargs are tolerated (the batcher / shared callers
+    pass engine-agnostic options)."""
+    makers = {"lm": _lm_engine,
+              "gnn": lambda: _gnn_engine(rt),
+              "batched_gnn": lambda: _batched_gnn_engine(rt)}
+    eng, req, check = makers[which]()
+    kwargs = {"lm": {"max_new_tokens": 2}}.get(which, {})
+    assert isinstance(eng, Engine)
+    check(eng.serve(req, **kwargs))
+    check(eng.serve(req, definitely_not_a_real_option=1, **kwargs))
+    if hasattr(eng, "close"):
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# (b) stats accounting + the compile bound
+# ---------------------------------------------------------------------------
+
+def test_stats_cumulative_reset_and_compile_count(rt):
+    eng = rt.serve(serve_batch=64)
+    ids = np.arange(20, dtype=np.int32)
+    eng.serve(ids)
+    eng.serve(ids)
+    st = eng.stats()
+    assert st["requests"] == 2 and st["microbatches"] == 2
+    assert st["rows_decoded"] > 0 and st["compile_count"] >= 1
+    compiles = st["compile_count"]
+
+    eng.reset()
+    st = eng.stats()
+    # counters zero, but the compile bill and the cache contents survive
+    assert st["requests"] == 0 and st["rows_decoded"] == 0
+    assert st["hits"] == 0 and st["misses"] == 0
+    assert st["compile_count"] == compiles
+    eng.serve(ids)
+    st = eng.stats()
+    assert st["requests"] == 1
+    assert st["compile_count"] == compiles, \
+        "warm shapes after reset must not recompile"
+    assert st["hits"] > 0, "reset must keep the cache contents"
+
+
+def test_mixed_size_stream_compiles_at_most_bucket_count(rt):
+    """Shape-bucketing regression: 100 requests of mixed sizes trigger at
+    most one compile per static decode bucket."""
+    eng = rt.serve(serve_batch=64)
+    rng = np.random.default_rng(3)
+    for _ in range(100):
+        eng.serve(rng.integers(0, N, size=int(rng.integers(1, 65))
+                               ).astype(np.int32))
+    st = eng.stats()
+    assert st["requests"] == 100
+    assert st["compile_count"] <= len(eng.decode_buckets()), (
+        f"{st['compile_count']} compiles > "
+        f"{len(eng.decode_buckets())} buckets {eng.decode_buckets()}")
+
+
+# ---------------------------------------------------------------------------
+# (c) ordering independence: concurrent batched == sequential, bitwise
+# ---------------------------------------------------------------------------
+
+def test_concurrent_batched_bitwise_equals_sequential(rt):
+    rng = np.random.default_rng(7)
+    reqs = _requests(rng, 12, overlap=3)
+
+    seq_engine = rt.serve(serve_batch=64)
+    seq = [seq_engine.serve(r) for r in reqs]
+
+    with ServingBatcher(rt.serve(serve_batch=64, max_coalesce=4),
+                        BatchingSpec(max_batch=4, max_delay_ms=20.0)) as sb:
+        order = rng.permutation(len(reqs))
+        with ThreadPoolExecutor(8) as ex:
+            futs = {int(i): ex.submit(sb.serve, reqs[i]) for i in order}
+        for i, s in enumerate(seq):
+            b = futs[i].result()
+            np.testing.assert_array_equal(b.embeddings, s.embeddings)
+            np.testing.assert_array_equal(b.logits, s.logits)
+            np.testing.assert_array_equal(b.predictions, s.predictions)
+        st = sb.stats()
+        assert st["completed"] == len(reqs) and st["shed"] == 0
+        assert st["max_coalesced"] > 1, \
+            "concurrent submits should actually coalesce"
+
+
+# ---------------------------------------------------------------------------
+# (d) cross-request dedup does strictly less decode work
+# ---------------------------------------------------------------------------
+
+def test_serve_many_dedups_across_requests(rt):
+    rng = np.random.default_rng(11)
+    reqs = _requests(rng, 8, overlap=4)
+
+    seq_engine = rt.serve(serve_batch=64)
+    for r in reqs:
+        seq_engine.serve(r)
+    seq_rows = seq_engine.stats()["rows_decoded"]
+
+    bat_engine = rt.serve(serve_batch=64, max_coalesce=4)
+    results = bat_engine.serve_many(reqs[:4]) + bat_engine.serve_many(reqs[4:])
+    st = bat_engine.stats()
+    assert st["rows_decoded"] < seq_rows, (
+        f"cross-request dedup must decode strictly fewer rows "
+        f"({st['rows_decoded']} vs sequential {seq_rows})")
+    assert all(r.batch_requests == 4 for r in results)
+    # rows_total accounting is per true request, not per padded bucket
+    assert st["rows_total"] == len(reqs) * bat_engine.frontier_cap
+
+
+def test_serve_many_rejects_oversized_microbatch(rt):
+    eng = rt.serve(serve_batch=64, max_coalesce=2)
+    reqs = [np.arange(4, dtype=np.int32)] * 3
+    with pytest.raises(ValueError, match="max_coalesce"):
+        eng.serve_many(reqs)
+
+
+# ---------------------------------------------------------------------------
+# (e) backpressure: loud shed, accepted requests always complete
+# ---------------------------------------------------------------------------
+
+class _SlowEngine:
+    """Engine stub whose first serve blocks until released — makes queue
+    occupancy deterministic for the shed assertions."""
+
+    def __init__(self):
+        self.started = threading.Event()
+        self.release = threading.Event()
+        self.served = []
+
+    def serve(self, request, **_ignored):
+        self.started.set()
+        self.release.wait(timeout=10)
+        self.served.append(np.asarray(request))
+        return len(self.served)
+
+
+def test_backpressure_sheds_loudly():
+    eng = _SlowEngine()
+    sb = ServingBatcher(eng, BatchingSpec(max_batch=1, max_delay_ms=0.0,
+                                          queue_depth=2))
+    try:
+        first = sb.submit(0)            # worker picks this up and blocks
+        assert eng.started.wait(timeout=10)
+        admitted = [sb.submit(1), sb.submit(2)]   # fills queue_depth=2
+        with pytest.raises(Overloaded) as ei:
+            sb.submit(3)
+        assert ei.value.queued == 2
+        assert ei.value.retry_after_s > 0
+        eng.release.set()
+        assert first.result(timeout=10) == 1
+        assert [f.result(timeout=10) for f in admitted] == [2, 3]
+        st = sb.stats()
+        assert st["shed"] == 1 and st["completed"] == 3
+    finally:
+        eng.release.set()
+        sb.close()
+
+
+def test_close_drains_admitted_requests():
+    eng = _SlowEngine()
+    eng.release.set()                    # never block
+    sb = ServingBatcher(eng, BatchingSpec(max_batch=4, max_delay_ms=1.0))
+    futs = [sb.submit(i) for i in range(10)]
+    sb.close()
+    assert sorted(f.result(timeout=0) for f in futs) == list(range(1, 11))
+    with pytest.raises(RuntimeError, match="closed"):
+        sb.submit(99)
+
+
+def test_engine_error_propagates_to_futures():
+    class _Boom:
+        def serve(self, request, **_ignored):
+            raise RuntimeError("boom")
+    with ServingBatcher(_Boom(), BatchingSpec(max_batch=2)) as sb:
+        with pytest.raises(RuntimeError, match="boom"):
+            sb.serve(0)
+
+
+def test_batcher_validates_max_batch_against_engine(rt):
+    eng = rt.serve(serve_batch=64, max_coalesce=2)
+    with pytest.raises(ValueError, match="max_coalesce"):
+        ServingBatcher(eng, BatchingSpec(max_batch=4))
+
+
+# ---------------------------------------------------------------------------
+# (f) BatchingSpec on RuntimeSpec: JSON round-trip + serve() wiring
+# ---------------------------------------------------------------------------
+
+def test_batching_spec_json_roundtrip():
+    spec = _spec().with_updates(
+        batching=BatchingSpec(max_batch=4, max_delay_ms=5.0, queue_depth=32))
+    back = RuntimeSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.batching == BatchingSpec(4, 5.0, 32)
+    # None stays None through the round trip
+    plain = _spec()
+    assert RuntimeSpec.from_json(plain.to_json()).batching is None
+
+
+def test_runtime_serve_returns_batcher_when_spec_asks(graph):
+    runtime = GraphRuntime.from_spec(
+        _spec().with_updates(batching=BatchingSpec(max_batch=4)), graph=graph)
+    try:
+        with runtime.serve(serve_batch=64) as tier:
+            assert isinstance(tier, ServingBatcher)
+            # the engine's request buckets were sized from the spec
+            assert tier.engine.max_coalesce == 4
+            res = tier.serve(np.arange(8, dtype=np.int32))
+            assert res.embeddings.shape == (8, runtime.cfg.hidden)
+        bare = runtime.serve(serve_batch=64, batching=False)
+        assert isinstance(bare, GraphInferenceEngine)
+    finally:
+        runtime.close()
+
+
+def test_batching_spec_validates():
+    with pytest.raises(ValueError):
+        BatchingSpec(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchingSpec(queue_depth=0)
+    with pytest.raises(ValueError):
+        BatchingSpec(max_delay_ms=-1.0)

@@ -107,7 +107,8 @@ from pathlib import Path
 
 root = Path(".")
 checked = 0
-for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json"):
+for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
+              "BENCH_serving.json"):
     path = root / name
     if not path.exists():
         continue
@@ -122,6 +123,16 @@ for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json"):
             assert e["modeled"]["hbm_bytes"] > 0, e
     elif name == "BENCH_decode.json":
         entries = list(doc["backends"].values())
+    elif name == "BENCH_serving.json":
+        entries = list(doc["runs"].values())
+        for e in entries:
+            for key in ("p50_us", "p95_us", "p99_us", "qps",
+                        "rows_decoded_per_request"):
+                assert isinstance(e.get(key), (int, float)), (name, key, e)
+        assert (doc["runs"]["batched"]["rows_decoded_per_request"]
+                < doc["runs"]["sequential"]["rows_decoded_per_request"]), (
+            "cross-request dedup must decode strictly fewer rows/request")
+        assert doc["bitwise_equal_at_staleness0"] is True, doc.keys()
     else:
         entries = [r for r in doc.get("runs", {}).values()
                    if isinstance(r, dict)]
