@@ -1,0 +1,150 @@
+"""Quality-vs-memory sweep across compression families (ISSUE 8).
+
+Puts the paper's bit-code hashing head-to-head against position-based hash
+embeddings (``lookup_impl="hashemb:gather"``, arXiv:2109.00101) and
+tensor-train factorized codebooks (``lookup_impl="tt"``, arXiv:2206.10581)
+at MATCHED memory budgets — the table1-style comparison ROADMAP item 4 asks
+for.  Memory is the decode-stage *table bytes*: family parameters (codebooks
+/ pools+wpos / TT cores) plus the per-entity ``codes_buf`` words (zero for
+hashemb, whose position hashes are recomputed from the id); the MLP tail is
+identical across families at fixed (d_c, d_m) and therefore excluded from
+the matching axis.  For each budget a small per-family grid (c, and TT rank
+r) picks the config closest to the target, every cell trains the same
+GraphSAGE workload through ``GraphRuntime`` (same graph, seeds, optimizer,
+steps) and reports val accuracy.
+
+Emits the usual CSV rows AND writes ``BENCH_compression.json``, gated in
+``tools/ci.sh --bench`` (>= 2 budgets x 3 families, ``mode``+``dtype`` on
+every entry).  CPU wall-clock is reported but the honest axes are
+``table_bytes`` vs ``val_accuracy``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+from benchmarks.common import bench_entry, emit, steps
+from repro.core import codes as codes_lib
+from repro.core.backend import tt_factor_pair
+
+N_NODES = 2000
+N_CLASSES = 8
+BATCH = 64
+M = 8
+D_C = 64
+D_M = 64
+TRAIN_STEPS = 150
+FAMILIES = ("paper", "hashemb", "tt")
+# target decode-stage table bytes (params + codes_buf) per budget
+BUDGETS = {"small_40k": 40_000, "large_512k": 520_000}
+C_GRID = (16, 32, 64, 128, 256)
+R_GRID = (2, 4, 8, 16, 32, 64)
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_compression.json"
+
+
+def table_bytes(family: str, c: int, r: int, n_entities: int = N_NODES,
+                m: int = M, d_c: int = D_C) -> int:
+    """f32 bytes of the decode-stage table + per-entity code storage."""
+    codes = codes_lib.n_words(c, m) * 4 * n_entities
+    if family == "paper":
+        return m * c * d_c * 4 + codes
+    if family == "hashemb":
+        return (m * c * d_c + m * d_c) * 4     # no codes_buf at all
+    if family == "tt":
+        c1, c2 = tt_factor_pair(c)
+        d1, d2 = tt_factor_pair(d_c)
+        return m * r * (c1 * d1 + c2 * d2) * 4 + codes
+    raise ValueError(family)
+
+
+def pick_config(family: str, target: int):
+    """Grid config whose table bytes land closest to ``target``."""
+    best = None
+    for c in C_GRID:
+        for r in (R_GRID if family == "tt" else (0,)):
+            b = table_bytes(family, c, r)
+            if best is None or abs(b - target) < abs(best[2] - target):
+                best = (c, r, b)
+    return best
+
+
+def _spec(lookup_impl: str, c: int, tt_rank: int):
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    from repro.optim import AdamWConfig
+    return RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N_NODES,
+                          n_classes=N_CLASSES, avg_degree=10, homophily=0.9),
+        model=paper_gnn_config("sage", n_nodes=N_NODES, n_classes=N_CLASSES,
+                               kind="hash_full", fanout=10),
+        optimizer=AdamWConfig(lr=1e-2, weight_decay=0.0),
+        batch_size=BATCH, data_seed=1, prefetch_depth=0,
+    ).with_updates(c=c, m=M, d_c=D_C, d_m=D_M, lookup_impl=lookup_impl,
+                   tt_rank=max(tt_rank, 1))
+
+
+IMPLS = {"paper": "onehot", "hashemb": "hashemb:gather", "tt": "tt"}
+
+
+def run():
+    import time as _time
+
+    from repro.graph.runtime import GraphRuntime
+
+    n_steps = steps(TRAIN_STEPS)
+    report = {
+        "workload": {"n_nodes": N_NODES, "n_classes": N_CLASSES,
+                     "batch": BATCH, "m": M, "d_c": D_C, "d_m": D_M,
+                     "train_steps": n_steps},
+        "budgets": {},
+    }
+    for bname, target in BUDGETS.items():
+        row = {"target_bytes": target, "families": {}}
+        for family in FAMILIES:
+            c, r, bytes_ = pick_config(family, target)
+            spec = _spec(IMPLS[family], c, r)
+            rt = GraphRuntime.from_spec(spec)
+            try:
+                t0 = _time.perf_counter()
+                res = rt.train(n_steps)
+                train_s = _time.perf_counter() - t0
+                ev = rt.evaluate("val")
+                dcfg = rt.cfg.embedding_config().decoder_config()
+                assert all(math.isfinite(l) for l in res.losses), family
+                entry = bench_entry(
+                    f"{bname}/{family}", mode="native",
+                    dtype=rt.cfg.compute_dtype,
+                    lookup_impl=IMPLS[family], c=c,
+                    tt_rank=(r if family == "tt" else None),
+                    table_bytes=bytes_,
+                    trainable_params=dcfg.trainable_params(),
+                    val_accuracy=float(ev["accuracy"]),
+                    val_loss=float(ev["loss"]),
+                    final_train_loss=float(res.losses[-1]),
+                    train_s=train_s)
+                row["families"][family] = entry
+                emit(f"compression_sweep/{bname}/{family}",
+                     train_s / max(n_steps, 1) * 1e6,
+                     f"bytes={bytes_} c={c}"
+                     + (f" r={r}" if family == "tt" else "")
+                     + f" val_acc={ev['accuracy']:.3f}")
+            finally:
+                rt.close()
+        report["budgets"][bname] = row
+
+    # smoke runs exercise the code path but must not clobber the committed
+    # real-measurement datapoint with 2-step throwaway numbers
+    from benchmarks import common
+    if common.SMOKE:
+        emit("compression_sweep/json", 0.0,
+             f"smoke: skipped writing {OUT_PATH.name}")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        emit("compression_sweep/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -12,6 +12,7 @@
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
 #   table5_cm_sweep      Table 5   — (c, m) sweep
+#   compression_sweep    ISSUE 8   — quality-vs-memory: paper vs hashemb vs tt
 #   kernels_micro        kernel CPU microbenchmarks
 #   roofline_report      §Roofline summary from dry-run artifacts (if present)
 #
@@ -37,6 +38,7 @@ MODULES = [
     "roofline_report",
     "fig1_reconstruction",
     "table5_cm_sweep",
+    "compression_sweep",
     "table1_gnn",
     "table3_merchant",
 ]

@@ -38,6 +38,9 @@ class EmbeddingSpec:
     # or bf16 run is a spec field change — JSON / checkpoint round-trips.
     param_dtype: Optional[str] = None   # e.g. "bfloat16"
     quantize: str = "none"              # "none" | "int8"
+    # TT rank r of the "tt" compression family (lookup_impl="tt" — see
+    # core.backend.family_of); ignored by the paper and hashemb families.
+    tt_rank: int = 8
 
     def to_config(self, n_entities: int, d_e: int, compute_dtype: str) -> EmbeddingConfig:
         return EmbeddingConfig(
@@ -49,6 +52,7 @@ class EmbeddingSpec:
             cache_capacity=self.cache_capacity,
             cache_staleness=self.cache_staleness,
             param_dtype=self.param_dtype, quantize=self.quantize,
+            tt_rank=self.tt_rank,
         )
 
 

@@ -8,6 +8,13 @@ argmax pass and only the decoder is kept — the paper's point is that this
 needs a pre-training stage over the *full* embedding table, which is exactly
 what makes it inapplicable at industrial scale (§2), but it is the strongest
 reconstruction baseline so we implement it for Fig. 1.
+
+Role in the system (docs/architecture.md): a *code-learning* baseline only —
+it produces codes for ``benchmarks/fig1_reconstruction.py`` but is not a
+``DecodeBackend`` and not selectable via ``lookup_impl``; the trainable
+alternatives to the paper's scheme that ARE wired end to end are the
+``hashemb`` / ``tt`` compression families (docs/decode_backends.md
+§Compression families).
 """
 
 from __future__ import annotations

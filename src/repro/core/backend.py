@@ -27,6 +27,25 @@ Four implementations are registered:
            ``all_to_all``ed back (routing = a host-built static-capacity
            ``graph.sampler.OwnerPlan`` riding on the batch).
 
+Two further entries select alternate *compression families* (ROADMAP item
+4) rather than alternate execution strategies — same registry, same
+frontier/dedup/cache/owner machinery, different parameterization (see
+``family_of`` and docs/decode_backends.md §Compression families):
+
+  hashemb  position-based hash embeddings (arXiv:2109.00101): each id maps
+           through m independent hash functions into shared parameter
+           pools combined with learned per-position weights.  No per-entity
+           ``codes_buf`` exists — codes are recomputed from the id per
+           lookup (``core.codes.position_codes``).  The pool gather itself
+           is delegated to a base backend (``"hashemb:gather"`` pins it),
+           so the decode math rides gather/onehot/pallas unchanged.
+  tt       tensor-train factorized codebooks (Nimble GNN, arXiv:2206.10581):
+           the (m, c, d_c) codebook tensor is stored as two TT cores
+           ``g0 (m, c1, d1, r)`` / ``g1 (m, r, c2, d2)`` with
+           ``c = c1*c2``, ``d_c = d1*d2``; the rank-r contraction is fused
+           into the decode (gather both cores' rows, one einsum) — the
+           full codebook is never materialized.
+
 Selection is by config string (``lookup_impl``): a backend name, or ``auto``
 which under a multi-device mesh picks ``owner`` when the measured frontier
 duplication beats ``OWNER_DUP_THRESHOLD`` (else ``sharded``), ``pallas`` on
@@ -152,14 +171,24 @@ class DecodeBackend:
                w0: Optional[Array] = None) -> Array:
         raise NotImplementedError
 
-    def _prep(self, codebooks: Array, w0: Optional[Array]):
+    def feature_dim(self, codebooks) -> int:
+        """Output feature dim ``d_c`` of ``decode`` given its ``codebooks``
+        operand.  The default reads the dense layout ``(m, c, d_c)``;
+        family backends whose codebooks are a pytree (``tt``) override it.
+        Collective wrappers use this instead of ``codebooks.shape[2]`` so
+        they stay layout-agnostic."""
+        return int(codebooks.shape[2])
+
+    def _prep(self, codebooks, w0: Optional[Array]):
         """Cast params to the policy's storage dtype (simulating bf16 HBM
         residency); int8 handling is backend-specific — fused scales in
         pallas, straight-through dequant in the XLA backends — so it is NOT
-        applied here."""
+        applied here.  ``codebooks`` may be a pytree (the ``tt`` family's
+        core pair); every leaf is cast."""
         p = self.policy
         if p.param_dtype is not None:
-            codebooks = codebooks.astype(p.param_dtype)
+            codebooks = jax.tree_util.tree_map(
+                lambda x: x.astype(p.param_dtype), codebooks)
             if w0 is not None:
                 w0 = w0.astype(p.param_dtype)
         return codebooks, w0
@@ -313,18 +342,37 @@ class PallasBackend(DecodeBackend):
 # sharded (data-parallel) decode
 # ---------------------------------------------------------------------------
 
+def _replicated_specs(tree):
+    """Per-leaf fully-replicated PartitionSpecs for a (possibly nested)
+    codebook pytree — exact-rank ``P(None, ..., None)`` so shard_map sees
+    one spec per leaf whatever the family's parameter layout is."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree_util.tree_map(lambda x: P(*([None] * x.ndim)), tree)
+
+
+def _psum_f32(tree, like, axis):
+    """reduce_dtype contract: cross-shard accumulation happens in f32 even
+    when the params (and so their cotangents) are bf16.  Pytree-wide."""
+    return jax.tree_util.tree_map(
+        lambda g, p: jax.lax.psum(g.astype(jnp.float32), axis).astype(p.dtype),
+        tree, like)
+
+
 def _sharded_decode(base: DecodeBackend, mesh, axis: str,
-                    codes: Array, codebooks: Array, w0: Array) -> Array:
+                    codes: Array, codebooks, w0: Array) -> Array:
     """Row-partitioned decode under ``shard_map``: each device decodes its
     block of frontier rows against the replicated codebooks, the forward
     ``all_gather``s the decoded rows, and the custom VJP ``psum``s the
     codebook/W0 cotangents so the replicated parameters see the full-batch
     gradient.  (shard_map with ``check_vma=False`` does not insert the
     replicated-input psum itself — spelling the VJP out keeps gradients
-    correct by construction.)"""
+    correct by construction.)  ``codebooks`` may be any pytree the base
+    backend understands (dense ``(m, c, d_c)``, or the ``tt`` core pair)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.parallel.sharding import shard_map
+
+    cb_specs = _replicated_specs(codebooks)
 
     @jax.custom_vjp
     def decode(codes, cb, w0):
@@ -333,7 +381,7 @@ def _sharded_decode(base: DecodeBackend, mesh, axis: str,
             return jax.lax.all_gather(out_l, axis, axis=0, tiled=True)
         return shard_map(
             local, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None, None), P(None)),
+            in_specs=(P(axis, None), cb_specs, P(None)),
             out_specs=P(None, None), check_vma=False)(codes, cb, w0)
 
     def fwd(codes, cb, w0):
@@ -346,17 +394,14 @@ def _sharded_decode(base: DecodeBackend, mesh, axis: str,
             _, vjp = jax.vjp(
                 lambda c, s: base.decode(codes_l, c, s), cb_, w0_)
             gcb, gw0 = vjp(g_l)
-            # reduce_dtype contract: cross-shard accumulation happens in f32
-            # even when the params (and so their cotangents) are bf16
-            gcb = jax.lax.psum(gcb.astype(jnp.float32), axis).astype(cb_.dtype)
+            gcb = _psum_f32(gcb, cb_, axis)
             gw0 = jax.lax.psum(gw0.astype(jnp.float32), axis).astype(w0_.dtype)
             return gcb, gw0
 
         gcb, gw0 = shard_map(
             local, mesh=mesh,
-            in_specs=(P(axis, None), P(axis, None), P(None, None, None),
-                      P(None)),
-            out_specs=(P(None, None, None), P(None)),
+            in_specs=(P(axis, None), P(axis, None), cb_specs, P(None)),
+            out_specs=(cb_specs, P(None)),
             check_vma=False)(codes, g, cb, w0)
         return None, gcb, gw0      # codes are integers: no gradient
 
@@ -418,6 +463,9 @@ class ShardedBackend(DecodeBackend):
         contract["collective_reduce"] = "float32 (psum of codebook/w0 grads)"
         return contract
 
+    def feature_dim(self, codebooks) -> int:
+        return self.base.feature_dim(codebooks)
+
     def _mesh_axis(self):
         return _active_mesh_axis(self.mesh, self.axis)
 
@@ -438,7 +486,7 @@ class ShardedBackend(DecodeBackend):
         if w0 is None:
             # keep one shard_map signature: multiplying by exactly 1.0 is a
             # bitwise no-op, and the dummy's cotangent is simply discarded
-            w0 = jnp.ones((codebooks.shape[2],), jnp.float32)
+            w0 = jnp.ones((self.base.feature_dim(codebooks),), jnp.float32)
         out = _sharded_decode(self.base, mesh, axis, codes, codebooks, w0)
         return out[:B]
 
@@ -448,7 +496,7 @@ class ShardedBackend(DecodeBackend):
 # ---------------------------------------------------------------------------
 
 def _owner_decode(base: DecodeBackend, mesh, axis: str,
-                  codes: Array, codebooks: Array, w0: Array, plan) -> Array:
+                  codes: Array, codebooks, w0: Array, plan) -> Array:
     """Owner-computes cross-shard frontier decode under ``shard_map``.
 
     Layout (all static, from the host-built ``OwnerPlan``): each shard's
@@ -480,9 +528,10 @@ def _owner_decode(base: DecodeBackend, mesh, axis: str,
     n = int(plan.req_rows.shape[0])
     oc = int(plan.req_rows.shape[2])
     cap = codes.shape[0] // n
-    d = codebooks.shape[2]
+    d = base.feature_dim(codebooks)
     ou = int(plan.owned_src.shape[1])
     plan_specs = (P(axis, None, None), P(axis, None), P(axis, None, None))
+    cb_specs = _replicated_specs(codebooks)
 
     def _owned_codes(codes_l, rr, os_l):
         """Requester-side gather + all_to_all + owner-side dedup gather."""
@@ -501,8 +550,7 @@ def _owner_decode(base: DecodeBackend, mesh, axis: str,
             return jax.lax.all_gather(out_l, axis, axis=0, tiled=True)
         return shard_map(
             local, mesh=mesh,
-            in_specs=(P(axis, None),) + plan_specs
-            + (P(None, None, None), P(None)),
+            in_specs=(P(axis, None),) + plan_specs + (cb_specs, P(None)),
             out_specs=P(None, None), check_vma=False)(
                 codes, req_rows, owned_src, ret_idx, cb, w0)
 
@@ -528,15 +576,15 @@ def _owner_decode(base: DecodeBackend, mesh, axis: str,
                     g_recv.reshape(-1, d).astype(jnp.float32))
             _, vjp = jax.vjp(lambda c, sc: base.decode(owned, c, sc), cb_, w0_)
             gcb, gw0 = vjp(ghat.astype(g_full.dtype))
-            gcb = jax.lax.psum(gcb.astype(jnp.float32), axis).astype(cb_.dtype)
+            gcb = _psum_f32(gcb, cb_, axis)
             gw0 = jax.lax.psum(gw0.astype(jnp.float32), axis).astype(w0_.dtype)
             return gcb, gw0
 
         gcb, gw0 = shard_map(
             local, mesh=mesh,
             in_specs=(P(axis, None),) + plan_specs
-            + (P(None, None), P(None, None, None), P(None)),
-            out_specs=(P(None, None, None), P(None)), check_vma=False)(
+            + (P(None, None), cb_specs, P(None)),
+            out_specs=(cb_specs, P(None)), check_vma=False)(
                 codes, req_rows, owned_src, ret_idx, g, cb, w0)
         return None, None, None, None, gcb, gw0   # ints: no gradient
 
@@ -589,6 +637,9 @@ class OwnerBackend(DecodeBackend):
             "float32 (cotangent scatter-add on owned rows + grad psum)")
         return contract
 
+    def feature_dim(self, codebooks) -> int:
+        return self.base.feature_dim(codebooks)
+
     def decode(self, codes, codebooks, w0=None):
         return self._fallback.decode(codes, codebooks, w0)
 
@@ -608,8 +659,165 @@ class OwnerBackend(DecodeBackend):
         if w0 is None:
             # same trick as ShardedBackend: one shard_map signature, and
             # multiplying by exactly 1.0 is a bitwise no-op
-            w0 = jnp.ones((codebooks.shape[2],), jnp.float32)
+            w0 = jnp.ones((self.base.feature_dim(codebooks),), jnp.float32)
         return _owner_decode(self.base, mesh, axis, codes, codebooks, w0, plan)
+
+
+# ---------------------------------------------------------------------------
+# compression families (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+# Registry names that select an alternate *compression family* (how the
+# embedding table is parameterized) rather than an execution strategy.  A
+# ``lookup_impl`` selects at most one; ``family_of`` finds it anywhere in
+# the ":"-separated spelling, so "owner:tt" and "hashemb:gather" both work.
+FAMILY_BACKENDS: Tuple[str, ...] = ("hashemb", "tt")
+
+
+def family_of(lookup_impl: Optional[str]) -> str:
+    """Compression family selected by a ``lookup_impl`` string: ``"hashemb"``
+    / ``"tt"`` when that name appears in any ":"-separated part, else
+    ``"paper"`` (the source paper's bit-code hashing — every pre-existing
+    spelling, including ``auto`` and the collective wrappers)."""
+    for part in (lookup_impl or "auto").split(":"):
+        if part in FAMILY_BACKENDS:
+            return part
+    return "paper"
+
+
+class HashEmbBackend(DecodeBackend):
+    """Position-based hash embeddings (arXiv:2109.00101) as a decode family.
+
+    Parameterization: m shared pools ``(m, c, d_c)`` plus learned
+    per-position weights ``wpos (m, d_c)``; entity id ``i`` contributes
+    ``sum_j wpos[j] * pools[j, h_j(i)]`` where ``h_j`` are m independent
+    hash functions (``core.codes.position_codes`` — recomputed from the id
+    at lookup time, so NO per-entity ``codes_buf`` exists and id-side memory
+    is zero).  ``apply_decoder`` folds ``wpos`` into the pools before the
+    call (``sum_j (wpos[j]*P[j])[h_j(i)] == sum_j wpos[j]*P[j][h_j(i)]``,
+    exact in f32 and differentiable to both factors), so what reaches this
+    backend is a standard ``(m, c, d_c)`` codebook gather — delegated
+    verbatim to a base backend (gather/onehot/pallas, incl. int8/bf16
+    policies).  ``"hashemb:gather"`` pins the base; ``"owner:hashemb"`` /
+    ``"sharded:hashemb"`` compose with the collectives unchanged."""
+
+    name = "hashemb"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+
+    def __init__(self, base: Optional[object] = None, interpret: bool = False,
+                 policy: Optional[MixedPrecisionPolicy] = None):
+        if base is None:
+            base = "pallas" if jax.default_backend() == "tpu" else "onehot"
+        _check_collective_base("hashemb", base)
+        if isinstance(base, str) and base.split(":")[0] in FAMILY_BACKENDS:
+            raise ValueError(
+                f"hashemb backend cannot wrap another family (base={base!r})")
+        self.base = get_backend(base, interpret=interpret, policy=policy)
+        self.policy = self.base.policy
+        self.preferred_pad = self.base.preferred_pad
+
+    def dtype_contract(self) -> Dict[str, str]:
+        contract = dict(self.base.dtype_contract(), backend=self.name)
+        contract["family"] = "hashemb (pools + per-position weights)"
+        return contract
+
+    def feature_dim(self, codebooks) -> int:
+        return self.base.feature_dim(codebooks)
+
+    def decode(self, codes, codebooks, w0=None):
+        return self.base.decode(codes, codebooks, w0)
+
+
+def tt_factor_pair(n: int) -> Tuple[int, int]:
+    """Most-balanced factorization ``n = a * b`` with ``a <= b`` (a scans
+    down from isqrt).  Used for both the code split ``c = c1*c2`` and the
+    feature split ``d_c = d1*d2`` of the ``tt`` family."""
+    if n < 1:
+        raise ValueError(f"cannot factor {n}")
+    a = int(np.sqrt(n))
+    while n % a:
+        a -= 1
+    return a, n // a
+
+
+def tt_materialize(g0: Array, g1: Array) -> Array:
+    """Contract a TT core pair back into the dense ``(m, c, d_c)`` codebook
+    it factorizes — the oracle for parity tests and the ``trainable_params``
+    accounting, never used on the decode hot path.
+
+    ``g0 (m, c1, d1, r)``, ``g1 (m, c2, r, d2)`` →
+    ``cb[j, x1*c2 + x2, u*d2 + v] = sum_r g0[j, x1, u, r] * g1[j, x2, r, v]``
+    """
+    m, c1, d1, r = g0.shape
+    _, c2, _, d2 = g1.shape
+    full = jnp.einsum("jxur,jyrv->jxyuv",
+                      g0.astype(jnp.float32), g1.astype(jnp.float32))
+    return full.reshape(m, c1 * c2, d1 * d2)
+
+
+class TTBackend(DecodeBackend):
+    """Tensor-train factorized codebooks (Nimble GNN, arXiv:2206.10581).
+
+    The dense ``(m, c, d_c)`` codebook is stored as two TT cores
+    ``g0 (m, c1, d1, r)`` / ``g1 (m, c2, r, d2)`` with ``c = c1*c2`` and
+    ``d_c = d1*d2`` (balanced splits from ``tt_factor_pair``), cutting
+    codebook memory from ``m*c*d_c`` to ``m*(c1*d1 + c2*d2)*r`` floats.
+    ``decode`` fuses the rank-r contraction into the lookup: each code
+    splits as ``x1 = code // c2``, ``x2 = code % c2``, both cores' rows are
+    gathered and ONE f32 einsum sums the position contributions — the dense
+    codebook is never materialized (``tt_materialize`` exists only as the
+    parity/accounting oracle).  ``codebooks`` is therefore the pytree
+    ``(g0, g1)``; the collective wrappers handle that via their pytree
+    specs, so ``"owner:tt"`` / ``"sharded:tt"`` compose unchanged."""
+
+    name = "tt"
+    capabilities = BackendCapabilities(grad=True, fused=False)
+    preferred_pad = _SUBLANE
+
+    def __init__(self, policy: Optional[MixedPrecisionPolicy] = None):
+        self.policy = policy or DEFAULT_POLICY
+
+    def dtype_contract(self) -> Dict[str, str]:
+        contract = super().dtype_contract()
+        contract["family"] = "tt (rank-r core pair, contraction fused)"
+        contract["accumulate"] = "float32 (core einsum + position sum)"
+        return contract
+
+    def feature_dim(self, codebooks) -> int:
+        g0, g1 = codebooks
+        return int(g0.shape[2]) * int(g1.shape[3])
+
+    def _quantized(self, g0, g1):
+        """absmax-int8 per (codebook, code row), like the dense path: each
+        core reshapes its per-code row to one vector, rides the same
+        straight-through ``quantize_dequantize``, and reshapes back."""
+        from repro.kernels.hash_decode import ops as hd_ops
+        m, c1, d1, r = g0.shape
+        _, c2, _, d2 = g1.shape
+        g0 = hd_ops.quantize_dequantize(
+            g0.reshape(m, c1, d1 * r)).reshape(m, c1, d1, r)
+        g1 = hd_ops.quantize_dequantize(
+            g1.reshape(m, c2, r * d2)).reshape(m, c2, r, d2)
+        return g0, g1
+
+    def decode(self, codes, codebooks, w0=None):
+        codebooks, w0 = self._prep(codebooks, w0)
+        if self.policy.quantize == "int8":
+            codebooks = self._quantized(*codebooks)
+        g0, g1 = codebooks
+        m, c1, d1, r = g0.shape
+        _, c2, _, d2 = g1.shape
+        x1 = codes // c2                                   # (B, m)
+        x2 = codes % c2
+        j = jnp.arange(m, dtype=codes.dtype)[None, :]      # (1, m)
+        a0 = g0[j, x1].astype(jnp.float32)                 # (B, m, d1, r)
+        a1 = g1[j, x2].astype(jnp.float32)                 # (B, m, r, d2)
+        # one contraction: rank-r core product AND the sum over the m
+        # positions, all accumulated in f32 (the reduce_dtype contract)
+        out = jnp.einsum("bjur,bjrv->buv", a0, a1).reshape(-1, d1 * d2)
+        if w0 is not None:
+            out = out * w0.astype(jnp.float32)[None, :]
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -630,6 +838,8 @@ register_backend("onehot", OnehotBackend)
 register_backend("pallas", PallasBackend)
 register_backend("sharded", ShardedBackend)
 register_backend("owner", OwnerBackend)
+register_backend("hashemb", HashEmbBackend)
+register_backend("tt", TTBackend)
 
 # ``auto`` prefers the owner-computes decode over the plain sharded decode
 # when the workload's measured duplication (frontier_rows / unique_rows, the
@@ -667,9 +877,10 @@ def get_backend(spec, *, interpret: bool = False,
     ``auto`` picks a collective decode under a multi-device mesh (``owner``
     when the measured ``duplication`` beats ``OWNER_DUP_THRESHOLD``, else
     ``sharded``), the fused kernel on TPU runtimes and the MXU-friendly XLA
-    formulation elsewhere.  ``sharded`` / ``owner`` accept an optional
-    base-backend suffix — ``"owner:gather"`` decodes owner-local through the
-    gather oracle (bitwise-stable row accumulation).  ``interpret`` affects
+    formulation elsewhere.  ``sharded`` / ``owner`` / ``hashemb`` accept an
+    optional base-backend suffix — ``"owner:gather"`` decodes owner-local
+    through the gather oracle (bitwise-stable row accumulation),
+    ``"hashemb:gather"`` pins the pool gather.  ``interpret`` affects
     ``pallas`` (directly or as a collective base).  ``policy`` sets the
     backend's ``MixedPrecisionPolicy``; it is only forwarded when given, so
     test-registered factories without the kwarg keep working."""
@@ -696,12 +907,12 @@ def get_backend(spec, *, interpret: bool = False,
             be.policy = policy
             return be
 
-    if name in ("sharded", "owner"):
+    if name in ("sharded", "owner", "hashemb"):
         return build(_REGISTRY[name], base=option or None, interpret=interpret)
     if option:
         raise ValueError(
             f"decode backend {name!r} takes no ':{option}' option "
-            f"(only 'sharded:<base>' / 'owner:<base>' do)")
+            f"(only 'sharded:<base>' / 'owner:<base>' / 'hashemb:<base>' do)")
     if name == "pallas":
         return build(_REGISTRY[name], interpret=interpret)
     return build(_REGISTRY[name])

@@ -104,6 +104,35 @@ def unpack_codes(packed, c: int, m: int) -> jnp.ndarray:
     return (bits * weights).sum(-1).astype(jnp.int32)
 
 
+def position_codes(ids, c: int, m: int, seed: int = 0) -> jnp.ndarray:
+    """(B,) entity ids -> (B, m) int32 position-hash codes in [0, c).
+
+    The ``hashemb`` compression family's hash functions (arXiv:2109.00101):
+    ``m`` independent stateless hashes of the entity id, recomputed at
+    lookup time — no per-entity ``codes_buf`` exists, so id-side memory is
+    zero and unseen ids hash without retraining.  Each position ``j`` mixes
+    ``id`` with a per-position odd key through a splitmix32-style finalizer
+    (xor-shift + odd-multiply avalanche, pure uint32 shift/mask/mul — VPU
+    friendly and identical on host and device), then keeps the top
+    ``log2(c)`` bits (the best-mixed ones).  Deterministic in
+    ``(ids, c, m, seed)``.
+    """
+    b = bits_per_code(c)
+    if m < 1:
+        raise ValueError(f"code length m must be >= 1, got {m}")
+    ids = jnp.asarray(ids, jnp.uint32)[:, None]             # (B, 1)
+    # per-position keys: golden-ratio stride, odd so multiplication is a
+    # bijection on uint32
+    j = jnp.arange(m, dtype=jnp.uint32)[None, :]            # (1, m)
+    key = (j * jnp.uint32(0x9E3779B9)
+           + jnp.uint32(2 * seed + 1) * jnp.uint32(0x85EBCA6B))
+    x = ids ^ key
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x >> jnp.uint32(32 - b)).astype(jnp.int32)      # top-b bits
+
+
 def count_collisions(codes) -> int:
     """Number of entities sharing a code with an earlier entity.
 

@@ -10,6 +10,14 @@
 For compressed kinds the per-entity state is a packed uint32 code row
 (non-trainable ``codes_buf``); the decoder parameters are shared by all
 entities, so total trainable state is independent of ``n_entities``.
+
+Orthogonally, ``lookup_impl`` may select an alternate *compression family*
+(``core.backend.family_of``; see core/decoder.py and
+docs/decode_backends.md): ``"hashemb"`` replaces the stored codes with
+per-lookup position hashes (``needs_codes`` is False — NO ``codes_buf``
+exists, id-side memory is zero) and ``"tt"`` keeps the codes but factorizes
+the codebook into a TT core pair.  Switching family is a one-field change;
+kind (dense/hash/random) and variant (full/light) compose unchanged.
 """
 
 from __future__ import annotations
@@ -58,10 +66,27 @@ class EmbeddingConfig:
     # lag behind (0 = always re-decode, bit-identical to uncached).
     cache_capacity: int = 0
     cache_staleness: int = 0
+    # TT rank r of the "tt" compression family (ignored by the others).
+    tt_rank: int = 8
 
     @property
     def is_compressed(self) -> bool:
         return self.kind in COMPRESSED_KINDS
+
+    @property
+    def family(self) -> str:
+        """Compression family selected by ``lookup_impl`` (core.backend):
+        "paper" (stored bit codes), "hashemb", or "tt"."""
+        from repro.core.backend import family_of
+        return family_of(self.lookup_impl)
+
+    @property
+    def needs_codes(self) -> bool:
+        """Whether this config stores a per-entity ``codes_buf``.  The
+        ``hashemb`` family recomputes position hashes from the id at lookup
+        time, so it needs none — call-sites that build/checkpoint codes
+        (graph runtime, LM init) gate on this, not ``is_compressed``."""
+        return self.is_compressed and self.family != "hashemb"
 
     def decoder_config(self) -> DecoderConfig:
         variant = "light" if self.kind.endswith("light") else "full"
@@ -70,6 +95,7 @@ class EmbeddingConfig:
             n_layers=self.n_layers, variant=variant,
             lookup_impl=self.lookup_impl, compute_dtype=self.compute_dtype,
             param_dtype=self.param_dtype, quantize=self.quantize,
+            tt_rank=self.tt_rank,
         )
 
 
@@ -104,6 +130,10 @@ def init_embedding(
     if not cfg.is_compressed:
         raise ValueError(f"unknown embedding kind {cfg.kind!r}")
     k_code, k_dec = jax.random.split(key)
+    if not cfg.needs_codes:
+        # hashemb family: codes are position hashes recomputed per lookup —
+        # the only per-entity state would be the ids themselves
+        return {"decoder": init_decoder(k_dec, cfg.decoder_config())}
     if codes is None:
         codes = make_codes(k_code, cfg, aux)
     expected = (cfg.n_entities, codes_lib.n_words(cfg.c, cfg.m))
@@ -132,8 +162,13 @@ def embed_lookup(
     if cfg.kind == "dense":
         table = params["table"].astype(jnp.dtype(cfg.compute_dtype))
         return table[ids]
-    packed = jnp.take(params["codes_buf"], ids, axis=0)       # (..., n_words)
-    codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)      # (..., m)
+    if not cfg.needs_codes:        # hashemb: hash the ids, no stored codes
+        flat = jnp.reshape(ids, (-1,))
+        codes = codes_lib.position_codes(flat, cfg.c, cfg.m).reshape(
+            *jnp.shape(ids), cfg.m)
+    else:
+        packed = jnp.take(params["codes_buf"], ids, axis=0)   # (..., n_words)
+        codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)  # (..., m)
     return apply_decoder(params["decoder"], codes, cfg.decoder_config(),
                          interpret=interpret, backend=backend, plan=plan)
 

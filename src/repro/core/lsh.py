@@ -12,6 +12,13 @@ projection result are alive at once; ``A`` itself can be consumed in row
 blocks (``row_block``) exactly as the paper's "load a few rows of A" note
 suggests.  Auxiliary input may be dense ``(n, d)`` or a sparse CSR matrix
 (adjacency), which is the paper's preferred representation.
+
+Role in the system (docs/architecture.md): this is step 2 of the train
+path — ``GraphRuntime`` calls ``encode_lsh`` on the adjacency to build the
+``codes_buf`` the ``paper`` and ``tt`` compression families decode through
+(the ``hashemb`` family recomputes position hashes instead and skips this
+module entirely; see docs/decode_backends.md §Compression families).  The
+``threshold`` / ``hops`` knobs ride ``EmbeddingSpec`` (docs/runtime_api.md).
 """
 
 from __future__ import annotations

@@ -11,6 +11,13 @@ number exactly (verified in tests/test_memory.py to ±0.01):
   Table 6 GloVe c=256,m=16@5000 → 0.59
   Table 2 binary code 28.55 MiB, light decoder 1.13 MiB, full 9.13 MiB,
           GPU-only ratio 43.75.
+
+Role in the system (docs/architecture.md): the closed-form side of every
+memory claim — ``benchmarks/table2_4_6_memory.py`` prints these exactly,
+and the per-family decode-stage accounting used by the quality-vs-memory
+sweep (``benchmarks/compression_sweep.py``, ``BENCH_compression.json``)
+lives on ``DecoderConfig.trainable_params()`` next door in ``decoder.py``
+(docs/decode_backends.md §Compression families).
 """
 
 from __future__ import annotations

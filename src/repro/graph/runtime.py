@@ -281,9 +281,11 @@ class GraphRuntime:
         from repro.train import init_gnn_train_state, make_gnn_train_step
         key = jax.random.PRNGKey(spec.init_seed)
         self.codes = None
-        if cfg.embedding_config().is_compressed:
+        if cfg.embedding_config().needs_codes:
             # numpy copy: the train state is donated per step, so a shared
             # device buffer would be deleted out from under a later rebuild
+            # (the hashemb family needs no codes at all: position hashes are
+            # recomputed from the ids at every lookup)
             self.codes = np.asarray(
                 emb_lib.make_codes(key, cfg.embedding_config(), aux=adj))
         self.state = init_gnn_train_state(key, cfg, codes=self.codes)

@@ -200,13 +200,15 @@ def init_lm(key, cfg: LMConfig, codes: Optional[Array] = None,
     neither is given — the launcher wires the real encode."""
     ks = nn.split_keys(key, ["embed", "blocks", "shared", "tail", "fnorm", "head", "pos"])
     ecfg = cfg.embedding_config()
-    if ecfg.is_compressed and codes is None and aux is None:
+    if ecfg.needs_codes and codes is None and aux is None:
+        # (the hashemb family skips this: its position hashes are recomputed
+        # per lookup, so there are no codes to build or store)
         codes = emb_lib.make_codes(
             jax.random.fold_in(ks["embed"], 1),
             dataclasses.replace(ecfg, kind="random_full"), None)
     n_emb_entities = ecfg.n_entities * (cfg.n_codebooks if cfg.input_mode == "audio_tokens" else 1)
     ecfg_n = dataclasses.replace(ecfg, n_entities=n_emb_entities)
-    if codes is not None and ecfg.is_compressed and codes.shape[0] != n_emb_entities:
+    if codes is not None and ecfg.needs_codes and codes.shape[0] != n_emb_entities:
         reps = -(-n_emb_entities // codes.shape[0])
         codes = jnp.tile(codes, (reps, 1))[:n_emb_entities]
     params: nn.Params = {

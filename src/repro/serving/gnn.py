@@ -92,6 +92,16 @@ class GraphInferenceEngine:
             resolved = (backend_mod.resolve_auto()
                         if decode_backend == "auto" else decode_backend)
             backend_mod.get_backend(resolved, interpret=interpret)
+            # execution strategy is servable-time-swappable; the compression
+            # FAMILY is baked into the trained params' layout and is not
+            have = backend_mod.family_of(cfg.embedding.lookup_impl)
+            want = backend_mod.family_of(resolved)
+            if want != have:
+                raise ValueError(
+                    f"decode_backend={decode_backend!r} selects compression "
+                    f"family {want!r} but the params were trained as "
+                    f"{have!r} (lookup_impl={cfg.embedding.lookup_impl!r}); "
+                    f"the family is a training-time choice")
             cfg = dataclasses.replace(
                 cfg, embedding=dataclasses.replace(
                     cfg.embedding, lookup_impl=resolved))

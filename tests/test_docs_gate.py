@@ -1,0 +1,66 @@
+"""Docs drift gate (ISSUE 8 satellite): tools/check_docs.py both passes on
+the real docs AND fails loudly when a documented name disappears — the gate
+must cut in both directions or it gates nothing."""
+
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_required_names_come_from_live_code():
+    req = check_docs.required_names()
+    # registry backends, incl. both PR-8 compression families
+    for name in ("gather", "onehot", "pallas", "sharded", "owner",
+                 "hashemb", "tt"):
+        assert name in req, name
+    # spec fields across both dataclasses
+    for name in ("lookup_impl", "tt_rank", "quantize", "batching",
+                 "owner_cap", "owner_unique_cap", "cache_plan_misses"):
+        assert name in req, name
+
+
+def test_real_docs_pass():
+    assert check_docs.main() == 0
+
+
+def test_missing_name_fails_loudly(tmp_path, capsys):
+    # redact one required backend name from a copy of the docs
+    for page in (ROOT / "docs").glob("*.md"):
+        text = page.read_text()
+        text = re.sub(r"\bhashemb\b", "REDACTED", text)
+        (tmp_path / page.name).write_text(text)
+    assert check_docs.main(docs_dir=tmp_path) == 1
+    err = capsys.readouterr().err
+    assert "hashemb" in err and "undocumented" in err
+
+
+def test_missing_spec_field_fails(tmp_path):
+    for page in (ROOT / "docs").glob("*.md"):
+        (tmp_path / page.name).write_text(
+            re.sub(r"\btt_rank\b", "REDACTED", page.read_text()))
+    missing = check_docs.missing_names(check_docs.docs_text(tmp_path))
+    assert set(missing) == {"tt_rank"}
+    assert missing["tt_rank"] == "configs.base.EmbeddingSpec field"
+
+
+def test_empty_docs_dir_is_loud(tmp_path):
+    with pytest.raises(SystemExit):
+        check_docs.docs_text(tmp_path)
+
+
+def test_word_boundary_matching_not_substring():
+    # "tt" must not be satisfied by e.g. "attention"; "c" not by "cache"
+    missing = check_docs.missing_names(
+        "attention cache owner_capacity", required={
+            "tt": "x", "c": "x", "owner_cap": "x"})
+    assert set(missing) == {"tt", "c", "owner_cap"}
+    assert check_docs.missing_names(
+        "the `tt` family, field c, and owner_cap", required={
+            "tt": "x", "c": "x", "owner_cap": "x"}) == {}

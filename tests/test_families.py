@@ -1,0 +1,426 @@
+# Alternate compression families behind the DecodeBackend registry (ISSUE 8):
+# position-based hash embeddings ("hashemb", arXiv:2109.00101) and
+# tensor-train factorized codebooks ("tt", arXiv:2206.10581) as peer
+# lookup_impls of the paper's bit-code hashing — gradient parity vs the
+# dense-gather oracle, spec/checkpoint round-trips, and composition with the
+# cached / mixed-precision / collective machinery.
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core import codes as codes_lib
+from repro.core import embedding as emb_lib
+from repro.core.backend import (
+    family_of, get_backend, tt_factor_pair, tt_materialize)
+from repro.core.embedding import EmbeddingConfig, embed_lookup, init_embedding
+from repro.nn import module as nn
+
+
+def small_cfg(impl, kind="random_full", **kw):
+    base = dict(kind=kind, n_entities=300, d_e=16, c=16, m=4, d_c=16, d_m=16,
+                n_layers=2, tt_rank=4, lookup_impl=impl,
+                compute_dtype="float32")
+    base.update(kw)
+    return EmbeddingConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# position hashes
+# ---------------------------------------------------------------------------
+
+def test_position_codes_shape_range_determinism():
+    ids = jnp.arange(512)
+    pc = codes_lib.position_codes(ids, 16, 8)
+    assert pc.shape == (512, 8) and pc.dtype == jnp.int32
+    assert int(pc.min()) >= 0 and int(pc.max()) < 16
+    assert (pc == codes_lib.position_codes(ids, 16, 8)).all()
+
+
+def test_position_codes_positions_independent():
+    pc = np.asarray(codes_lib.position_codes(jnp.arange(2048), 16, 4))
+    # distinct hash functions per position, and each roughly uniform
+    for j in range(1, 4):
+        assert not (pc[:, 0] == pc[:, j]).all()
+    counts = np.bincount(pc.reshape(-1), minlength=16)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_position_codes_seed_and_validation():
+    ids = jnp.arange(100)
+    a = codes_lib.position_codes(ids, 16, 4, seed=0)
+    b = codes_lib.position_codes(ids, 16, 4, seed=1)
+    assert not (a == b).all()
+    with pytest.raises(ValueError):
+        codes_lib.position_codes(ids, 15, 4)     # not a power of two
+
+
+# ---------------------------------------------------------------------------
+# family selection / registry
+# ---------------------------------------------------------------------------
+
+def test_family_of_spellings():
+    assert family_of("onehot") == "paper"
+    assert family_of("auto") == "paper"
+    assert family_of(None) == "paper"
+    assert family_of("owner:gather") == "paper"
+    assert family_of("hashemb") == "hashemb"
+    assert family_of("hashemb:gather") == "hashemb"
+    assert family_of("sharded:hashemb") == "hashemb"
+    assert family_of("owner:hashemb:gather") == "hashemb"
+    assert family_of("tt") == "tt"
+    assert family_of("owner:tt") == "tt"
+
+
+def test_registry_has_families():
+    names = backend_mod.available_backends()
+    assert "hashemb" in names and "tt" in names
+    assert get_backend("hashemb:gather").base.name == "gather"
+    assert get_backend("owner:tt").base.name == "tt"
+
+
+def test_hashemb_rejects_collective_and_family_bases():
+    with pytest.raises(ValueError):
+        get_backend("hashemb:sharded")
+    with pytest.raises(ValueError):
+        get_backend("hashemb:tt")
+
+
+def test_tt_takes_no_base_option():
+    with pytest.raises(ValueError):
+        get_backend("tt:gather")
+
+
+def test_tt_factor_pair_balanced():
+    assert tt_factor_pair(16) == (4, 4)
+    assert tt_factor_pair(64) == (8, 8)
+    assert tt_factor_pair(12) == (3, 4)
+    a, b = tt_factor_pair(17)
+    assert a * b == 17
+
+
+# ---------------------------------------------------------------------------
+# value + gradient parity vs the dense-gather oracle
+# ---------------------------------------------------------------------------
+
+def test_tt_decode_matches_materialized_gather():
+    key = jax.random.PRNGKey(0)
+    m, c, d_c, r, B = 4, 16, 24, 3, 64
+    c1, c2 = tt_factor_pair(c)
+    d1, d2 = tt_factor_pair(d_c)
+    g0 = jax.random.normal(key, (m, c1, d1, r))
+    g1 = jax.random.normal(jax.random.PRNGKey(1), (m, c2, r, d2))
+    codes = jax.random.randint(jax.random.PRNGKey(2), (B, m), 0, c)
+    out = get_backend("tt").decode(codes, (g0, g1))
+    ref = get_backend("gather").decode(codes, tt_materialize(g0, g1))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert get_backend("tt").feature_dim((g0, g1)) == d_c
+
+
+def test_tt_grad_parity_vs_materialized_oracle():
+    key = jax.random.PRNGKey(3)
+    m, c, d_c, r, B = 4, 16, 16, 3, 32
+    c1, c2 = tt_factor_pair(c)
+    d1, d2 = tt_factor_pair(d_c)
+    g0 = jax.random.normal(key, (m, c1, d1, r))
+    g1 = jax.random.normal(jax.random.PRNGKey(4), (m, c2, r, d2))
+    codes = jax.random.randint(jax.random.PRNGKey(5), (B, m), 0, c)
+    tgt = jax.random.normal(jax.random.PRNGKey(6), (B, d_c))
+
+    def loss_tt(g0, g1):
+        return ((get_backend("tt").decode(codes, (g0, g1)) - tgt) ** 2).sum()
+
+    def loss_oracle(g0, g1):
+        cb = tt_materialize(g0, g1)
+        return ((get_backend("gather").decode(codes, cb) - tgt) ** 2).sum()
+
+    ga = jax.grad(loss_tt, argnums=(0, 1))(g0, g1)
+    gb = jax.grad(loss_oracle, argnums=(0, 1))(g0, g1)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_hashemb_decode_matches_prescaled_gather():
+    # the backend sees pools pre-scaled by wpos (apply_decoder folds them),
+    # so hashemb:gather must be bitwise the plain gather on that product
+    cfg = small_cfg("hashemb:gather")
+    p = init_embedding(jax.random.PRNGKey(0), cfg)["decoder"]
+    ids = jnp.arange(50)
+    codes = codes_lib.position_codes(ids, cfg.c, cfg.m)
+    cb = p["pools"] * p["wpos"][:, None, :]
+    ref = get_backend("gather").decode(codes, cb)
+    out = get_backend("hashemb:gather").decode(codes, cb)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_hashemb_grad_parity_vs_oracle():
+    cfg = small_cfg("hashemb:gather")
+    p = init_embedding(jax.random.PRNGKey(1), cfg)
+    dec = p["decoder"]
+    ids = jnp.arange(40)
+    codes = codes_lib.position_codes(ids, cfg.c, cfg.m)
+
+    def loss_family(dec):
+        return embed_lookup({"decoder": dec}, ids, cfg).sum()
+
+    def loss_oracle(dec):
+        # hand-built oracle: gather(pools * wpos) + the same MLP
+        from repro.core.decoder import apply_decoder
+        cb = dec["pools"] * dec["wpos"][:, None, :]
+        fake = {"codebooks": cb, "mlp": dec["mlp"]}
+        dcfg = dataclasses.replace(cfg.decoder_config(), lookup_impl="gather")
+        return apply_decoder(fake, codes, dcfg).sum()
+
+    ga = jax.grad(loss_family)(dec)
+    # oracle grads land on the product; chain-rule them back by hand
+    gfake = jax.grad(loss_oracle)(dec)
+    np.testing.assert_allclose(np.asarray(ga["pools"]),
+                               np.asarray(gfake["pools"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ga["wpos"]),
+                               np.asarray(gfake["wpos"]),
+                               rtol=1e-5, atol=1e-6)
+    for k in ga["mlp"]:
+        np.testing.assert_allclose(np.asarray(ga["mlp"][k]),
+                                   np.asarray(gfake["mlp"][k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_hashemb_light_trains_wpos_only():
+    cfg = small_cfg("hashemb:gather", kind="random_light")
+    p = init_embedding(jax.random.PRNGKey(2), cfg)
+    assert "pools_buf" in p["decoder"] and "wpos" in p["decoder"]
+    mask = nn.trainable_mask(p["decoder"])
+    assert mask["pools_buf"] is False and mask["wpos"] is True
+
+
+def test_tt_light_freezes_cores():
+    cfg = small_cfg("tt", kind="random_light")
+    p = init_embedding(jax.random.PRNGKey(3), cfg)
+    dec = p["decoder"]
+    assert "tt_g0_buf" in dec and "tt_g1_buf" in dec and "w0" in dec
+    mask = nn.trainable_mask(dec)
+    assert mask["tt_g0_buf"] is False and mask["w0"] is True
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting at matched budgets
+# ---------------------------------------------------------------------------
+
+def _n_bias(dcfg):
+    return (dcfg.d_e if dcfg.n_layers == 1
+            else dcfg.d_m * (dcfg.n_layers - 1) + dcfg.d_e)
+
+
+@pytest.mark.parametrize("impl", ["onehot", "hashemb:gather", "tt"])
+@pytest.mark.parametrize("kind", ["random_full", "random_light"])
+def test_closed_form_param_counts(impl, kind):
+    cfg = small_cfg(impl, kind=kind)
+    p = init_embedding(jax.random.PRNGKey(4), cfg)
+    dcfg = cfg.decoder_config()
+    actual = nn.param_count(p["decoder"], trainable_only=True)
+    # the paper's closed form has never counted MLP biases
+    assert dcfg.trainable_params() + _n_bias(dcfg) == actual
+    total = sum(l.size for l in jax.tree_util.tree_leaves(p["decoder"]))
+    assert dcfg.frozen_params() == total - actual
+
+
+def test_tt_cuts_decode_stage_params():
+    paper = small_cfg("onehot").decoder_config()
+    tt = small_cfg("tt").decoder_config()
+    assert tt._decode_stage_params() < paper._decode_stage_params()
+
+
+# ---------------------------------------------------------------------------
+# embedding layer: no codes_buf for hashemb, one-field family switch
+# ---------------------------------------------------------------------------
+
+def test_hashemb_has_no_codes_buf():
+    cfg = small_cfg("hashemb:gather")
+    assert cfg.family == "hashemb" and not cfg.needs_codes
+    p = init_embedding(jax.random.PRNGKey(5), cfg)
+    assert set(p) == {"decoder"}
+    out = embed_lookup(p, jnp.arange(10), cfg)
+    assert out.shape == (10, cfg.d_e)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_paper_family_unchanged():
+    cfg = small_cfg("onehot")
+    assert cfg.family == "paper" and cfg.needs_codes
+    p = init_embedding(jax.random.PRNGKey(6), cfg)
+    assert "codes_buf" in p
+
+
+def test_one_field_family_switch():
+    for impl, keys in (("onehot", {"codebooks"}),
+                       ("hashemb:gather", {"pools", "wpos"}),
+                       ("tt", {"tt_g0", "tt_g1"})):
+        cfg = small_cfg(impl)
+        p = init_embedding(jax.random.PRNGKey(7), cfg)
+        dec_keys = set(p["decoder"]) - {"mlp"}
+        assert dec_keys == keys, (impl, dec_keys)
+        out = embed_lookup(p, jnp.arange(6), cfg)
+        assert out.shape == (6, cfg.d_e)
+
+
+# ---------------------------------------------------------------------------
+# mixed precision / int8 composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["hashemb:gather", "tt"])
+def test_families_respect_drift_bounds(impl):
+    cfg32 = small_cfg(impl)
+    p = init_embedding(jax.random.PRNGKey(8), cfg32)
+    ids = jnp.arange(64)
+    ref = embed_lookup(p, ids, cfg32)
+    scale = float(jnp.abs(ref).max())
+    for pd, q, bound in (("bfloat16", "none",
+                          backend_mod.DRIFT_BOUNDS["bfloat16"]),
+                         (None, "int8", backend_mod.DRIFT_BOUNDS["int8"])):
+        cfg = dataclasses.replace(cfg32, param_dtype=pd, quantize=q)
+        out = embed_lookup(p, ids, cfg)
+        drift = float(jnp.abs(out - ref).max()) / scale
+        assert drift <= bound, (impl, pd, q, drift)
+
+
+@pytest.mark.parametrize("impl", ["hashemb:gather", "tt"])
+def test_family_dtype_contract(impl):
+    policy = backend_mod.MixedPrecisionPolicy(param_dtype="bfloat16",
+                                              compute_dtype="bfloat16")
+    be = get_backend(impl, policy=policy)
+    contract = be.dtype_contract()
+    assert contract["backend"] == impl.split(":")[0]
+    assert "family" in contract
+    assert contract["output"] == "float32"
+
+
+# ---------------------------------------------------------------------------
+# cached decode composes (staleness 0 is bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["hashemb:gather", "tt"])
+def test_cached_staleness0_bitwise(impl):
+    from repro.core.backend import CachedDecodeBackend
+    cfg = small_cfg(impl)
+    p = init_embedding(jax.random.PRNGKey(9), cfg)
+    ids = jnp.arange(32)
+    decode_fn = lambda i: embed_lookup(p, i, cfg)
+    cache = CachedDecodeBackend(staleness=0)
+    state = cache.init_state(64, cfg.d_e)
+    out1, state = cache.lookup(state, ids, decode_fn)
+    out2, state = cache.lookup(state, ids, decode_fn)
+    ref = decode_fn(ids)
+    assert (np.asarray(out1) == np.asarray(ref)).all()
+    assert (np.asarray(out2) == np.asarray(ref)).all()
+
+
+# ---------------------------------------------------------------------------
+# spec / checkpoint round-trip through GraphRuntime
+# ---------------------------------------------------------------------------
+
+def _family_spec(tmpdir, impl, **extra):
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    return RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=300, n_classes=5),
+        model=paper_gnn_config("sage", n_nodes=300, n_classes=5, fanout=5),
+        batch_size=16, total_steps=2, log_every=1,
+        ckpt_dir=str(tmpdir), ckpt_every=1,
+    ).with_updates(c=16, m=4, d_c=16, d_m=16, lookup_impl=impl, **extra)
+
+
+@pytest.mark.parametrize("impl,extra", [("hashemb:gather", {}),
+                                        ("tt", {"tt_rank": 3})])
+def test_spec_ckpt_resume_roundtrip(impl, extra, tmp_path):
+    from repro.graph.runtime import GraphRuntime, RuntimeSpec
+    spec = _family_spec(tmp_path, impl, **extra)
+    assert RuntimeSpec.from_dict(spec.to_dict()) == spec      # JSON round-trip
+    rt = GraphRuntime.from_spec(spec)
+    try:
+        if impl.startswith("hashemb"):
+            assert rt.codes is None
+            assert "codes_buf" not in rt.state["params"]["embed"]
+        res = rt.train(2)
+        assert all(math.isfinite(l) for l in res.losses)
+        rt2 = GraphRuntime.resume(str(tmp_path))
+        try:
+            emb2 = rt2.spec.model.embedding
+            assert emb2.lookup_impl == impl                   # same family
+            assert emb2.tt_rank == spec.model.embedding.tt_rank
+            a = sorted(jax.tree_util.tree_leaves_with_path(rt.state["params"]),
+                       key=lambda t: str(t[0]))
+            b = sorted(jax.tree_util.tree_leaves_with_path(rt2.state["params"]),
+                       key=lambda t: str(t[0]))
+            assert [str(pa) for pa, _ in a] == [str(pb) for pb, _ in b]
+            for (pa, x), (_, y) in zip(a, b):                 # bitwise params
+                assert (np.asarray(x) == np.asarray(y)).all(), pa
+        finally:
+            rt2.close()
+    finally:
+        rt.close()
+
+
+def test_serving_rejects_family_switch(tmp_path):
+    from repro.graph.runtime import GraphRuntime
+    rt = GraphRuntime.from_spec(_family_spec(tmp_path, "hashemb:gather"))
+    try:
+        rt.train(1)
+        with pytest.raises(ValueError, match="family"):
+            rt.serve(serve_batch=16, decode_backend="tt")
+        eng = rt.serve(serve_batch=16, decode_backend="hashemb:onehot")
+        out = eng.serve(np.arange(8))
+        assert np.isfinite(np.asarray(out.embeddings)).all()
+    finally:
+        rt.close()
+
+
+# ---------------------------------------------------------------------------
+# collective composition (owner/sharded wrap the families' pytree codebooks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice(4)
+@pytest.mark.parametrize("impl", ["sharded:hashemb", "owner:tt"])
+def test_collective_family_training(impl, tmp_path):
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+    spec = RuntimeSpec(
+        graph=GraphSource(kind="powerlaw", seed=0, n_nodes=1000, n_classes=8),
+        model=paper_gnn_config("sage", n_nodes=1000, n_classes=8, fanout=10),
+        batch_size=64, n_shards=4, total_steps=2, log_every=1,
+    ).with_updates(c=16, m=8, d_c=64, d_m=64, lookup_impl=impl, tt_rank=4)
+    rt = GraphRuntime.from_spec(spec)
+    try:
+        res = rt.train(2)
+        assert all(math.isfinite(l) for l in res.losses), (impl, res.losses)
+    finally:
+        rt.close()
+
+
+@pytest.mark.multidevice(4)
+def test_owner_tt_matches_sharded_tt():
+    # owner-computes dedup must not change values: same losses as the
+    # row-partitioned decode of the same family
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+    losses = {}
+    for impl in ("sharded:tt", "owner:tt"):
+        spec = RuntimeSpec(
+            graph=GraphSource(kind="powerlaw", seed=0, n_nodes=1000,
+                              n_classes=8),
+            model=paper_gnn_config("sage", n_nodes=1000, n_classes=8,
+                                   fanout=10),
+            batch_size=64, n_shards=4, total_steps=2, log_every=1,
+        ).with_updates(c=16, m=8, d_c=64, d_m=64, lookup_impl=impl, tt_rank=4)
+        rt = GraphRuntime.from_spec(spec)
+        try:
+            losses[impl] = rt.train(2).losses
+        finally:
+            rt.close()
+    assert losses["sharded:tt"][0] == losses["owner:tt"][0], losses

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Docs drift gate (ISSUE 8 satellite): the docs layer can't silently rot.
+
+The names a user reaches for — every decode backend in the
+``core.backend`` registry, every ``RuntimeSpec`` pipeline knob, every
+``EmbeddingSpec`` compression field — must each appear somewhere in
+``docs/*.md``.  The required set is derived from the LIVE code
+(``available_backends()`` + ``dataclasses.fields``), so adding a backend or
+a spec field without documenting it fails this gate; conversely a doc
+refresh can't claim coverage it doesn't have.
+
+Matching is word-boundary regex over the concatenated docs, so ``c`` the
+field must appear as the standalone token ``c`` (it does, in the field
+tables), not merely inside other words.
+
+Usage:  python tools/check_docs.py
+Exit 0 = every required name documented.  Wired into the tools/ci.sh
+import-gate leg; tests/test_docs_gate.py asserts both directions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ROOT / "docs"
+
+
+def required_names() -> dict:
+    """Name -> provenance, derived from the live registry and spec types."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.configs.base import EmbeddingSpec
+    from repro.core.backend import available_backends
+    from repro.graph.runtime import RuntimeSpec
+
+    req = {}
+    for name in available_backends():
+        req[name] = "core.backend registry"
+    for f in dataclasses.fields(RuntimeSpec):
+        req[f.name] = "graph.runtime.RuntimeSpec field"
+    for f in dataclasses.fields(EmbeddingSpec):
+        req[f.name] = "configs.base.EmbeddingSpec field"
+    return req
+
+
+def docs_text(docs_dir: Path = DOCS) -> str:
+    pages = sorted(docs_dir.glob("*.md"))
+    if not pages:
+        raise SystemExit(f"check_docs: no markdown pages under {docs_dir}")
+    return "\n".join(p.read_text() for p in pages)
+
+
+def missing_names(text: str, required=None) -> dict:
+    """Subset of ``required`` absent (word-boundary) from ``text``."""
+    required = required_names() if required is None else required
+    return {name: src for name, src in required.items()
+            if not re.search(rf"\b{re.escape(name)}\b", text)}
+
+
+def main(docs_dir: Path = DOCS) -> int:
+    required = required_names()
+    missing = missing_names(docs_text(docs_dir), required)
+    if missing:
+        print(f"check_docs: {len(missing)} undocumented name(s) — every "
+              f"registry backend and spec field must appear in docs/*.md:",
+              file=sys.stderr)
+        for name, src in sorted(missing.items()):
+            print(f"  {name:24s} ({src})", file=sys.stderr)
+        return 1
+    print(f"check_docs OK ({len(required)} names covered by "
+          f"{len(sorted(docs_dir.glob('*.md')))} pages)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Single CI entry point (ISSUE 2 satellite; multidevice leg from ISSUE 3).
 #
-#   tools/ci.sh                import gate + tier-1 pytest
+#   tools/ci.sh                import gate + docs drift gate (check_docs.py:
+#                              every registry backend / spec field must be
+#                              documented) + tier-1 pytest
 #   tools/ci.sh --bench        ... plus the benchmark suite in --smoke mode
 #                              (2 steps per benchmark: exercises every
 #                              module's code path so benchmarks can't
@@ -53,8 +55,9 @@ for arg in "$@"; do
     esac
 done
 
-echo "== [1/2] import-health gate =="
+echo "== [1/2] import-health + docs drift gate =="
 python tools/check_imports.py
+python tools/check_docs.py
 
 if [[ "$RUN_MULTI" == 1 ]]; then
     echo "== [2/3] multidevice pytest (8 forced host devices) =="
@@ -108,7 +111,7 @@ from pathlib import Path
 root = Path(".")
 checked = 0
 for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
-              "BENCH_serving.json"):
+              "BENCH_serving.json", "BENCH_compression.json"):
     path = root / name
     if not path.exists():
         continue
@@ -133,6 +136,17 @@ for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
                 < doc["runs"]["sequential"]["rows_decoded_per_request"]), (
             "cross-request dedup must decode strictly fewer rows/request")
         assert doc["bitwise_equal_at_staleness0"] is True, doc.keys()
+    elif name == "BENCH_compression.json":
+        budgets = doc["budgets"]
+        assert len(budgets) >= 2, f"need >= 2 matched budgets, got {budgets.keys()}"
+        entries = []
+        for bname, row in budgets.items():
+            fams = row["families"]
+            assert set(fams) == {"paper", "hashemb", "tt"}, (bname, fams.keys())
+            for e in fams.values():
+                for key in ("table_bytes", "val_accuracy", "final_train_loss"):
+                    assert isinstance(e.get(key), (int, float)), (bname, key, e)
+                entries.append(e)
     else:
         entries = [r for r in doc.get("runs", {}).values()
                    if isinstance(r, dict)]
