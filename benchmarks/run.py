@@ -8,6 +8,7 @@
 #   sharded_pipeline     ISSUE 3   — 1- vs 4-shard streaming step (8 forced devices)
 #   serving_gnn          ISSUE 4   — GraphRuntime serve(): miss-only cached decode
 #   serving_load         ISSUE 7   — continuous batching under Zipfian load
+#   elastic_failover     ISSUE 9   — kill/rescale recovery: steps lost, bytes moved
 #   table1_gnn           Table 1   — NC/Rand/Hash with 4 GNNs + link pred
 #   table2_4_6_memory    Tables 2/4/6 — memory arithmetic (EXACT)
 #   table3_merchant      Table 3   — bipartite merchant classification
@@ -34,6 +35,7 @@ MODULES = [
     "sharded_pipeline",
     "serving_gnn",
     "serving_load",
+    "elastic_failover",
     "kernels_micro",
     "roofline_report",
     "fig1_reconstruction",

@@ -855,6 +855,24 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def rederive_owner_caps(frontier_cap: int, n_shards: int,
+                        explicit: Tuple[Optional[int], Optional[int]] = (None, None),
+                        ) -> Tuple[Optional[int], Optional[int]]:
+    """Owner-exchange capacities for a (possibly rescaled) shard count.
+
+    The ``(owner_cap, owner_unique_cap)`` sizing depends on ``n_shards``
+    (request buckets shrink as shards multiply), so an elastic rescale must
+    not carry the old run's caps over verbatim.  Policy: if the caller never
+    pinned caps explicitly (both ``None``), keep them derived — return
+    ``(None, None)`` and let the runtime size them per-plan; if either was
+    pinned, re-derive both from ``default_owner_caps`` at the *new* shard
+    count, which preserves the cap/2 adequacy argument documented there."""
+    if explicit[0] is None and explicit[1] is None:
+        return (None, None)
+    from repro.graph.sampler import default_owner_caps
+    return default_owner_caps(int(frontier_cap), int(n_shards))
+
+
 def resolve_auto(duplication: Optional[float] = None) -> str:
     """``auto`` resolution: under a mesh whose data axis is actually split,
     the owner-computes decode when the measured frontier duplication

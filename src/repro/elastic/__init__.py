@@ -1,0 +1,30 @@
+"""Elastic sharded training: live shard join/leave, checkpointless peer
+recovery, and exact rescale (docs/elastic.md, ROADMAP item 2).
+
+Public surface:
+  ``ElasticSpec`` / ``ElasticManager`` / ``ElasticResult`` — the step-fenced
+      membership state machine (``manager``);
+  ``FailurePlan`` — deterministic fault injection (``failures``);
+  ``pack_state`` / ``transfer_state`` / ``unpack_state`` — the chunked,
+      CRC-verified peer wire (``transfer``);
+  ``rescale_spec`` / ``rescale_runtime`` — exact shard-count changes
+      (``rescale``; also reachable as ``GraphRuntime.rescale``).
+"""
+
+from repro.elastic.failures import FailurePlan
+from repro.elastic.manager import (DEGRADED, HEALTHY, RESCALING, ElasticError,
+                                   ElasticManager, ElasticResult, ElasticSpec,
+                                   RecoveryReport)
+from repro.elastic.rescale import install_state, rescale_runtime, rescale_spec
+from repro.elastic.transfer import (Chunk, ChunkCorruption, TransferStats,
+                                    chunk_payload, pack_state, transfer_state,
+                                    unpack_state)
+
+__all__ = [
+    "HEALTHY", "DEGRADED", "RESCALING",
+    "ElasticError", "ElasticManager", "ElasticResult", "ElasticSpec",
+    "RecoveryReport", "FailurePlan",
+    "Chunk", "ChunkCorruption", "TransferStats",
+    "chunk_payload", "pack_state", "transfer_state", "unpack_state",
+    "install_state", "rescale_runtime", "rescale_spec",
+]

@@ -1,0 +1,260 @@
+"""ElasticManager: step-fenced shard membership for sharded training.
+
+State machine (docs/elastic.md):
+
+    HEALTHY --lease expired--> DEGRADED --survivors >= min_shards--> RESCALING
+       ^                           |                                    |
+       |                           +--survivors < min_shards--> ElasticError
+       +------------- rescaled runtime resumes training ----------------+
+
+The manager owns the training loop's shard membership the way the torchft
+``Manager`` owns its process group: training advances through step fences
+(``train.loop`` calls back every ``fence_every`` steps), each fence renews
+the step lease of every shard that is alive per the heartbeat source
+(deterministically simulated by a ``FailurePlan`` here; a real fleet wires
+actual heartbeats, with ``heartbeat_timeout_s`` as the wall-clock
+backstop).  A shard whose lease lapses more than ``lease_steps`` fences is
+declared dead; the fence raises ``FenceInterrupt``, training stops at a
+step boundary, and the manager runs recovery:
+
+  1. capture the survivors' replicated state (params/opt/cache) + batch
+     source state — data-parallel training means any survivor has it;
+  2. push it through the chunked, CRC-verified peer wire
+     (``transfer.transfer_state``; corrupted chunks are detected and
+     retransmitted, bounded by ``max_transfer_retries``) — the checkpoint
+     directory is **never** read;
+  3. build the rescaled runtime at the survivor count
+     (``rescale.rescale_runtime`` — exact, see that module) and resume.
+
+The manager refuses runtimes with ``spec.ckpt_dir`` set: checkpointed runs
+use absolute-step training semantics and auto-resume, which would fight
+the manager's own step accounting — checkpoint-based topology changes go
+through ``GraphRuntime.rescale_checkpoint`` instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.elastic.failures import FailurePlan
+from repro.elastic.transfer import transfer_state, pack_state, unpack_state
+from repro.train.loop import FenceInterrupt
+
+HEALTHY = "HEALTHY"
+DEGRADED = "DEGRADED"
+RESCALING = "RESCALING"
+
+
+class ElasticError(RuntimeError):
+    """Recovery is impossible (e.g. survivors < ``min_shards``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSpec:
+    """Elastic-training knobs (rides on ``RuntimeSpec.elastic``).
+
+    ``lease_steps``: fences a shard may miss before it is declared dead.
+    Larger tolerates longer heartbeat hiccups; smaller detects real deaths
+    sooner (fewer steps lost).
+
+    ``min_shards``: floor on the post-recovery shard count; shrinking below
+    it raises ``ElasticError`` instead of silently degrading.
+
+    ``chunk_bytes``: peer-transfer wire chunk size (CRC per chunk, so this
+    is also the retransmission granularity on corruption).
+
+    ``max_transfer_retries``: retransmissions allowed per corrupted chunk
+    before the transfer aborts with ``ChunkCorruption``.
+
+    ``heartbeat_timeout_s``: wall-clock liveness backstop for real fleets
+    where a shard can wedge *between* fences; the in-process simulation is
+    step-driven and only records it.
+    """
+
+    lease_steps: int = 2
+    min_shards: int = 1
+    chunk_bytes: int = 1 << 20
+    max_transfer_retries: int = 2
+    heartbeat_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.lease_steps < 1:
+            raise ValueError(f"lease_steps must be >= 1, got {self.lease_steps}")
+        if self.min_shards < 1:
+            raise ValueError(f"min_shards must be >= 1, got {self.min_shards}")
+        if self.chunk_bytes < 1:
+            raise ValueError(f"chunk_bytes must be >= 1, got {self.chunk_bytes}")
+        if self.max_transfer_retries < 0:
+            raise ValueError(
+                f"max_transfer_retries must be >= 0, got {self.max_transfer_retries}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ElasticSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """One failure → recovery cycle, in the units that matter: steps lost
+    to detection latency and bytes moved over the peer wire (wall-clock on
+    a CPU container lies; see ROADMAP "CPU timings lie")."""
+
+    failed_shards: Tuple[int, ...]
+    detected_at_step: int      # global 0-based step index of the detecting fence
+    steps_lost: int            # steps run past the dead shard's lease grace
+    n_before: int
+    n_after: int
+    payload_bytes: int
+    bytes_transferred: int     # wire bytes including retransmissions
+    chunks: int
+    retransmits: int
+
+
+@dataclasses.dataclass
+class ElasticResult:
+    losses: List[float]
+    steps: int                       # completed global steps
+    reports: List[RecoveryReport]
+    history: List[str]               # state-machine transitions, in order
+    runtime: Any                     # the (possibly rescaled) live runtime
+
+
+class ElasticManager:
+    """Owns shard membership for one training run over a ``GraphRuntime``.
+
+    ``plan`` injects deterministic faults (tests/benchmarks); ``None`` means
+    no shard ever dies and ``run`` degenerates to plain training.  ``spec``
+    defaults to the runtime's ``RuntimeSpec.elastic`` (or ``ElasticSpec()``).
+    """
+
+    def __init__(self, runtime, plan: Optional[FailurePlan] = None,
+                 spec: Optional[ElasticSpec] = None):
+        if runtime.spec.ckpt_dir:
+            raise ValueError(
+                "ElasticManager needs a checkpoint-free runtime: with "
+                "spec.ckpt_dir set, train() uses absolute-step auto-resume "
+                "semantics that fight the manager's step accounting.  Peer "
+                "recovery never reads checkpoints anyway; for checkpoint-"
+                "based topology changes use GraphRuntime.rescale_checkpoint.")
+        self.rt = runtime
+        self.plan = plan
+        self.spec = spec or runtime.spec.elastic or ElasticSpec()
+        self.state = HEALTHY
+        self.history: List[str] = [HEALTHY]
+        self.reports: List[RecoveryReport] = []
+        self.n_shards = max(1, int(runtime.spec.n_shards))
+        self._done = 0                      # completed global steps
+        self._leases = {s: -1 for s in range(self.n_shards)}
+        self._pending: Optional[Tuple[Tuple[int, ...], int]] = None
+        # kill events already recovered from: after a rescale renumbers the
+        # survivors 0..n-1, a consumed (shard, step) entry must not re-fire
+        # against the *new* shard wearing the old id
+        self._consumed: set = set()
+
+    # -- liveness ---------------------------------------------------------
+    def _fence(self, step: int) -> None:
+        """Step-fence callback: renew leases, detect expiries.  ``step`` is
+        the loop-local 0-based index just finished; global index is offset
+        by the steps completed before the current ``train`` call."""
+        gstep = self._done + step
+        for s in range(self.n_shards):
+            if not self._alive(s, gstep):
+                continue
+            if self.plan is not None and self.plan.delayed(s, gstep):
+                continue
+            self._leases[s] = gstep
+        dead = tuple(s for s in range(self.n_shards)
+                     if gstep - self._leases[s] > self.spec.lease_steps)
+        if dead:
+            self.state = DEGRADED
+            self.history.append(DEGRADED)
+            self._pending = (dead, gstep)
+            raise FenceInterrupt(f"shards {list(dead)} lease-expired at "
+                                 f"step {gstep}")
+
+    def _alive(self, shard: int, gstep: int) -> bool:
+        """Plan liveness minus already-consumed kill events: a kill entry
+        that triggered a recovery is spent — the rescaled topology reuses
+        shard ids, and the new shard wearing the dead one's id is alive."""
+        if self.plan is None:
+            return True
+        return not any(s == shard and gstep >= at
+                       and (s, at) not in self._consumed
+                       for s, at in self.plan.kill)
+
+    # -- recovery ---------------------------------------------------------
+    def _recover(self) -> None:
+        dead, detected = self._pending
+        self._pending = None
+        self._consumed.update((s, at) for s, at in self.plan.kill
+                              if at <= detected)
+        n_after = self.n_shards - len(dead)
+        if n_after < self.spec.min_shards:
+            raise ElasticError(
+                f"shards {list(dead)} died at step {detected}; "
+                f"{n_after} survivors < min_shards={self.spec.min_shards} "
+                f"— cannot rescale, run must restart from a checkpoint")
+        # detection latency in steps: how far past the dead shards' lease
+        # grace the fleet ran before the fence tripped
+        steps_lost = detected - min(self._leases[s] for s in dead) \
+            - self.spec.lease_steps
+        # 1. survivors' replicated state + batch source state (any survivor
+        #    holds both — data-parallel params are replicated and the source
+        #    state is (seed, step))
+        source_state = (self.rt.data_iter.state_dict()
+                        if hasattr(self.rt.data_iter, "state_dict") else None)
+        payload = pack_state(self.rt.state, {"source": source_state})
+        # 2. the peer wire: chunked, CRC-verified, bounded retransmission
+        wire, stats = transfer_state(
+            payload, chunk_bytes=self.spec.chunk_bytes,
+            tamper=self.plan.tamper if self.plan is not None else None,
+            max_retries=self.spec.max_transfer_retries)
+        # 3. rescale to the survivor count from the transferred copy ONLY
+        #    (the new runtime's fresh init state is just the unpack template;
+        #    every array it trains on came over the wire)
+        self.state = RESCALING
+        self.history.append(RESCALING)
+        from repro.elastic.rescale import install_state, rescale_spec
+        from repro.graph.runtime import GraphRuntime
+        spec2 = rescale_spec(self.rt.spec, n_after)
+        new_rt = GraphRuntime.from_spec(spec2,
+                                        graph=(self.rt.adj, self.rt.labels))
+        state, extra = unpack_state(wire, new_rt.state)
+        install_state(new_rt, state, extra.get("source"))
+        self.rt.close()
+        self.rt = new_rt
+        self.n_shards = n_after
+        self._leases = {s: self._done - 1 for s in range(n_after)}
+        self.state = HEALTHY
+        self.history.append(HEALTHY)
+        self.reports.append(RecoveryReport(
+            failed_shards=dead, detected_at_step=detected,
+            steps_lost=steps_lost, n_before=n_after + len(dead),
+            n_after=n_after, payload_bytes=stats.payload_bytes,
+            bytes_transferred=stats.bytes_transferred, chunks=stats.chunks,
+            retransmits=stats.retransmits))
+
+    # -- driver -----------------------------------------------------------
+    def run(self, total_steps: int, on_metrics=None) -> ElasticResult:
+        """Train for ``total_steps`` global steps, surviving every planned
+        failure.  Returns the concatenated loss curve (failure steps
+        included — the simulation computes them; a fleet recomputes them
+        post-rescale) and one ``RecoveryReport`` per recovery."""
+        total = int(total_steps)
+        losses: List[float] = []
+        while self._done < total:
+            res = self.rt.train(total - self._done, on_metrics=on_metrics,
+                                fence=self._fence)
+            losses.extend(res.losses)
+            if res.interrupted_at is None:
+                self._done = total
+                break
+            self._done += res.interrupted_at
+            self._recover()
+        return ElasticResult(losses=losses, steps=self._done,
+                             reports=self.reports, history=self.history,
+                             runtime=self.rt)

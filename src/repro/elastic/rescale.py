@@ -1,0 +1,97 @@
+"""Exact RuntimeSpec-driven rescale: N-shard state → M-shard continuation.
+
+Why this can be *exact* (docs/elastic.md has the full argument): the
+hashed sampler draws one **global** batch per ``(seed, step)`` — every
+neighbour slot is a pure function of ``(seed, step, global position,
+path)`` — and shards merely slice it (``graph.sampler.sample_hashed``).
+The shard count never enters the draw, so a run rescaled from N to M
+shards consumes, step for step, the **same global batch stream** a native
+M-shard run would.  The paper's hashing is likewise data-independent
+(codes are a pure function of node id), so the owner partition
+``node_id % n_shards`` remaps with zero recomputation.  Together: carry
+``(seed, step)`` over, rebuild the mesh/owner plan at the new count, and
+the continuation is bit-identical to a never-rescaled M-shard run from
+the same state.
+
+Requirements enforced here: the *global* ``batch_size`` is fixed across
+the rescale and must divide evenly by the new shard count; pinned
+owner-exchange caps are re-derived at the new count
+(``core.backend.rederive_owner_caps``); ``ckpt_dir`` does NOT carry over
+(the old directory holds old-topology checkpoints that would fail the
+manifest topology check — pass ``ckpt_dir=`` explicitly to start a new
+one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.train.checkpoint import _flatten, _unflatten_into
+
+
+def rescale_spec(spec, n_shards: int, ckpt_dir: Optional[str] = None):
+    """New ``RuntimeSpec`` for the same run at a different shard count."""
+    n = int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    if spec.batch_size % n:
+        raise ValueError(
+            f"cannot rescale to n_shards={n}: global batch_size "
+            f"{spec.batch_size} is not divisible by it (the global batch is "
+            f"the determinism anchor and never changes across a rescale)")
+    from repro.core.backend import rederive_owner_caps
+    cap = spec.frontier_cap
+    if cap is None and (spec.owner_cap is not None
+                        or spec.owner_unique_cap is not None):
+        from repro.graph.engine import default_frontier_cap
+        cap = default_frontier_cap(spec.batch_size // n, spec.model.fanouts,
+                                   spec.pad_to, spec.model.n_nodes)
+    oc, ou = rederive_owner_caps(cap if cap is not None else 0, n,
+                                 explicit=(spec.owner_cap,
+                                           spec.owner_unique_cap))
+    return dataclasses.replace(spec, n_shards=n, owner_cap=oc,
+                               owner_unique_cap=ou, ckpt_dir=ckpt_dir)
+
+
+def install_state(rt, state: Any, source_state: Optional[dict] = None) -> None:
+    """Install transferred/carried-over train state (and optionally batch
+    source state) into a freshly built runtime.
+
+    The state goes through the checkpoint flatten/unflatten pair so it gets
+    the same leaf-path and shape validation a restore would; the batch
+    source state is remapped onto the runtime's shard count
+    (``graph.sampler.remap_shard_state`` — the exactness argument lives
+    there) before loading."""
+    rt.state = _unflatten_into(rt.state, _flatten(state))
+    if source_state is not None:
+        from repro.graph.sampler import remap_shard_state
+        remapped = remap_shard_state(source_state, rt.spec.n_shards)
+        if hasattr(rt.data_iter, "load_state_dict"):
+            rt.data_iter.load_state_dict(remapped)
+        # miss-planning runs: re-anchor the host cache shadow to the
+        # installed device cache (same move GraphRuntime.resume makes)
+        src = getattr(rt.data_iter, "source", rt.data_iter)
+        if hasattr(src, "sync_shadow") and "cache" in rt.state:
+            src.sync_shadow(rt.state["cache"])
+
+
+def rescale_runtime(rt, n_shards: int, state: Any = None,
+                    source_state: Optional[dict] = None,
+                    ckpt_dir: Optional[str] = None):
+    """Build a new ``GraphRuntime`` at ``n_shards`` continuing ``rt``'s run.
+
+    ``state`` / ``source_state`` default to ``rt``'s current train state and
+    batch-source state (the in-process rescale); the elastic manager passes
+    the peer-transferred copies instead.  The graph is reused as-is —
+    regenerating it would be pure waste since the descriptor is
+    deterministic.  The caller owns closing the old runtime."""
+    from repro.graph.runtime import GraphRuntime
+    spec2 = rescale_spec(rt.spec, n_shards, ckpt_dir=ckpt_dir)
+    new_rt = GraphRuntime.from_spec(spec2, graph=(rt.adj, rt.labels))
+    if state is None:
+        state = rt.state
+    if source_state is None and hasattr(rt.data_iter, "state_dict"):
+        source_state = rt.data_iter.state_dict()
+    install_state(new_rt, state, source_state)
+    return new_rt

@@ -1,0 +1,157 @@
+"""Checkpointless peer recovery: shard state over a chunked, checksummed wire.
+
+When a shard dies mid-run, the survivors hold everything needed to rebuild
+it — data-parallel training replicates params/optimizer state, and the
+batch-source state is a handful of integers — so recovery never has to
+touch the checkpoint directory (the zeroband ``state_dict_send_recv``
+pattern).  This module is that wire:
+
+  ``pack_state``      pytree + JSON sidecar  →  one npz-format byte payload
+  ``chunk_payload``   payload  →  fixed-size ``Chunk``s, each CRC-stamped
+  ``transfer_state``  simulated send/receive with per-chunk verification
+                      and bounded retransmission (fault-injectable via
+                      ``FailurePlan.tamper``)
+  ``unpack_state``    payload  →  pytree (validated against a template,
+                      same shape/leaf checks as checkpoint restore)
+
+The payload reuses the checkpoint leaf layout (``train.checkpoint._flatten``
+path-keyed arrays inside an ``np.savez`` container) so the two persistence
+paths — durable checkpoint and peer transfer — can never drift apart in
+what they capture.  In this CPU container the "wire" is a loop over chunks;
+on a fleet the same chunk/CRC/retry framing rides a TCP stream or a NCCL
+send/recv, and ``TransferStats`` reports what CI gates on either way:
+bytes moved (including retransmits), chunk count, retransmit count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.train.checkpoint import _flatten, _unflatten_into
+
+# JSON sidecar leaf (batch-source state etc.) inside the npz payload; the
+# name cannot collide with pytree path keys, which are "/"-joined.
+_EXTRA_KEY = "__extra__"
+
+
+class ChunkCorruption(RuntimeError):
+    """A chunk failed CRC verification on every allowed transmission."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One wire unit: ``payload`` plus the CRC32 computed *at the sender*.
+    A tampered payload keeps the sender's CRC, so ``verify`` catches it."""
+
+    seq: int
+    total: int
+    payload: bytes
+    crc: int
+
+    def verify(self) -> bool:
+        return (zlib.crc32(self.payload) & 0xFFFFFFFF) == self.crc
+
+
+@dataclasses.dataclass
+class TransferStats:
+    payload_bytes: int        # logical size of the transferred state
+    bytes_transferred: int    # wire bytes including retransmissions
+    chunks: int
+    retransmits: int
+
+
+def pack_state(state: Any, extra: Optional[Dict] = None) -> bytes:
+    """Serialize a pytree + JSON-able sidecar into one byte payload."""
+    flat = _flatten(state)
+    if _EXTRA_KEY in flat:
+        raise ValueError(f"state pytree path collides with {_EXTRA_KEY!r}")
+    blob = json.dumps(extra or {}).encode()
+    flat[_EXTRA_KEY] = np.frombuffer(blob, np.uint8)
+    bio = io.BytesIO()
+    np.savez(bio, **flat)
+    return bio.getvalue()
+
+
+def unpack_state(data: bytes, state_template: Any) -> Tuple[Any, Dict]:
+    """Inverse of ``pack_state``; validates every leaf against the template
+    (missing-leaf / shape mismatches raise, exactly like checkpoint
+    restore).  Returns ``(state, extra)``."""
+    with np.load(io.BytesIO(data)) as z:
+        flat = {k: z[k] for k in z.files}
+    extra = {}
+    if _EXTRA_KEY in flat:
+        extra = json.loads(bytes(flat.pop(_EXTRA_KEY)).decode())
+    return _unflatten_into(state_template, flat), extra
+
+
+def chunk_payload(data: bytes, chunk_bytes: int) -> List[Chunk]:
+    """Split a payload into CRC-stamped ``Chunk``s of at most
+    ``chunk_bytes`` (the last one may be short; an empty payload still
+    produces one chunk so the receiver can distinguish "empty" from
+    "nothing arrived")."""
+    if chunk_bytes < 1:
+        raise ValueError(f"chunk_bytes must be >= 1, got {chunk_bytes}")
+    views = [data[i:i + chunk_bytes] for i in range(0, len(data), chunk_bytes)]
+    if not views:
+        views = [b""]
+    total = len(views)
+    return [Chunk(seq=i, total=total, payload=p,
+                  crc=zlib.crc32(p) & 0xFFFFFFFF)
+            for i, p in enumerate(views)]
+
+
+def _corrupt(chunk: Chunk) -> Chunk:
+    """Flip one payload byte, keeping the sender's CRC — the receiver-side
+    ``verify`` must catch this."""
+    buf = bytearray(chunk.payload if chunk.payload else b"\x00")
+    buf[len(buf) // 2] ^= 0xFF
+    return dataclasses.replace(chunk, payload=bytes(buf))
+
+
+def transfer_state(
+    data: bytes,
+    chunk_bytes: int = 1 << 20,
+    tamper: Optional[Callable[[int, int], bool]] = None,
+    max_retries: int = 2,
+) -> Tuple[bytes, TransferStats]:
+    """Move ``data`` across the (simulated) wire chunk by chunk.
+
+    Each chunk is re-sent until its CRC verifies at the receiver, up to
+    ``max_retries`` retransmissions; exhausting the budget raises
+    ``ChunkCorruption`` (recovery then falls back to the checkpoint path —
+    the manager surfaces this loudly rather than training on garbage).
+    ``tamper(seq, attempt)`` is the fault-injection hook
+    (``FailurePlan.tamper``).  Returns the reassembled payload — always
+    bit-identical to ``data`` when it returns at all — plus the wire
+    accounting."""
+    chunks = chunk_payload(data, chunk_bytes)
+    received: List[bytes] = []
+    wire_bytes = 0
+    retransmits = 0
+    for chunk in chunks:
+        for attempt in range(max_retries + 1):
+            sent = chunk
+            if tamper is not None and tamper(chunk.seq, attempt):
+                sent = _corrupt(chunk)
+            wire_bytes += len(sent.payload)
+            if attempt > 0:
+                retransmits += 1
+            if sent.verify():
+                received.append(sent.payload)
+                break
+        else:
+            raise ChunkCorruption(
+                f"chunk {chunk.seq}/{chunk.total} failed CRC on all "
+                f"{max_retries + 1} transmissions — peer transfer aborted "
+                f"(state NOT installed); recover from the checkpoint dir "
+                f"or raise ElasticSpec.max_transfer_retries")
+    out = b"".join(received)
+    stats = TransferStats(payload_bytes=len(data), bytes_transferred=wire_bytes,
+                          chunks=len(chunks), retransmits=retransmits)
+    return out, stats

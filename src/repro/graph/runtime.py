@@ -40,6 +40,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import EmbeddingSpec, GNNConfig
+from repro.elastic.manager import ElasticSpec
 from repro.graph.engine import (FullGraphBatch, GNNModel, PrefetchIterator,
                                 SageBatchSource, ShardedSageBatchSource)
 from repro.graph.sampler import NeighborSampler
@@ -156,6 +157,9 @@ class RuntimeSpec:
     # continuous-batching serving tier (serving.batcher); None = bare
     # engine, a BatchingSpec makes rt.serve() return a ServingBatcher
     batching: Optional[BatchingSpec] = None
+    # elastic training knobs (repro.elastic); None = defaults when an
+    # ElasticManager drives the run, irrelevant otherwise
+    elastic: Optional[ElasticSpec] = None
     # pallas interpret mode; None resolves to "not on a TPU runtime"
     interpret: Optional[bool] = None
 
@@ -206,6 +210,8 @@ class RuntimeSpec:
         d["split_frac"] = tuple(d["split_frac"])
         if d.get("batching") is not None:
             d["batching"] = BatchingSpec(**d["batching"])
+        if d.get("elastic") is not None:
+            d["elastic"] = ElasticSpec(**d["elastic"])
         return cls(graph=graph, model=model, optimizer=opt, **d)
 
     @classmethod
@@ -301,17 +307,9 @@ class GraphRuntime:
         self.mesh = None
         self.place: Callable[[Any], Any] = lambda b: b
         if spec.n_shards > 1:
-            from jax.sharding import Mesh
-
             from repro.parallel.policy import make_frontier_placement
-            if jax.device_count() < spec.n_shards:
-                raise ValueError(
-                    f"spec.n_shards={spec.n_shards} but only "
-                    f"{jax.device_count()} jax devices are visible (force "
-                    f"host devices via XLA_FLAGS=--xla_force_host_platform_"
-                    f"device_count=N, see tools/ci.sh --multidevice)")
-            self.mesh = Mesh(np.asarray(jax.devices()[:spec.n_shards]),
-                             ("data",))
+            from repro.parallel.sharding import data_mesh
+            self.mesh = data_mesh(spec.n_shards)
             self.place = make_frontier_placement(self.mesh)
 
         # -- sampler + batch source ----------------------------------------
@@ -453,7 +451,8 @@ class GraphRuntime:
         return self._jitted_step
 
     def train(self, steps: Optional[int] = None,
-              on_metrics: Optional[Callable[[int, Dict], None]] = None):
+              on_metrics: Optional[Callable[[int, Dict], None]] = None,
+              fence: Optional[Callable[[int], None]] = None):
         """Run the generic fault-tolerant loop for ``steps`` (default
         ``spec.total_steps``) and absorb the resulting state.
 
@@ -461,7 +460,15 @@ class GraphRuntime:
         count: the loop auto-resumes from the newest checkpoint (params,
         optimizer, data-pipeline state AND the spec ride in every manifest)
         and trains the remaining gap.  Without a checkpoint dir it simply
-        runs ``steps`` more steps.  Returns the ``LoopResult``."""
+        runs ``steps`` more steps.  Returns the ``LoopResult``.
+
+        Every checkpoint manifest is stamped with the run's shard topology
+        and auto-resume validates it (``train.TopologyMismatch`` on a
+        mismatch — rescale via ``GraphRuntime.rescale`` instead).
+
+        ``fence``: step-fence callback (``run_training``), the hook
+        ``repro.elastic.ElasticManager`` drives liveness through; it may
+        raise ``FenceInterrupt`` to stop at a step boundary."""
         from repro.train import LoopConfig, run_training
         spec = self.spec
         total = int(steps if steps is not None else spec.total_steps)
@@ -470,9 +477,40 @@ class GraphRuntime:
             LoopConfig(total_steps=total, ckpt_every=spec.ckpt_every,
                        log_every=spec.log_every),
             ckpt=self.ckpt, to_device=self._to_device, on_metrics=on_metrics,
-            extra_base={"spec": self.spec.to_dict()}, prejitted=True)
+            extra_base={"spec": self.spec.to_dict()}, prejitted=True,
+            fence=fence,
+            topology={"n_shards": spec.n_shards,
+                      "batch_size": spec.batch_size})
         self.state = res.state
         return res
+
+    # -- elastic rescale -------------------------------------------------
+    def rescale(self, n_shards: int, ckpt_dir: Optional[str] = None
+                ) -> "GraphRuntime":
+        """Exact in-process rescale: a new runtime at ``n_shards`` that
+        continues this run's state and batch stream bit-identically to a
+        native ``n_shards``-shard run (``repro.elastic.rescale`` has the
+        argument; requires the global ``batch_size`` to divide evenly).
+        The old runtime stays usable; close it when done.  ``ckpt_dir``
+        names a *fresh* checkpoint directory for the rescaled run — the
+        old one is stamped with the old topology and stays behind."""
+        from repro.elastic.rescale import rescale_runtime
+        return rescale_runtime(self, n_shards, ckpt_dir=ckpt_dir)
+
+    @classmethod
+    def rescale_checkpoint(cls, ckpt_dir: str, n_shards: int,
+                           graph: Optional[Tuple[Any, np.ndarray]] = None,
+                           new_ckpt_dir: Optional[str] = None
+                           ) -> "GraphRuntime":
+        """The sanctioned cross-topology resume: rebuild the checkpointed
+        run at its *original* shard count (topology check passes by
+        construction), then exact-rescale to ``n_shards``.  This is the
+        path the ``TopologyMismatch`` error message points at."""
+        rt = cls.resume(ckpt_dir, graph=graph)
+        try:
+            return rt.rescale(n_shards, ckpt_dir=new_ckpt_dir)
+        finally:
+            rt.close()
 
     # -- evaluation ------------------------------------------------------
     def _eval_fn(self, kind: str):

@@ -152,6 +152,31 @@ def default_owner_caps(cap: int, n_shards: int,
     return int(oc), int(ou)
 
 
+def remap_shard_state(state: dict, n_shards: int, shard: int = 0) -> dict:
+    """Remap a batch-source ``state_dict`` onto a different shard count.
+
+    This is the sampler-state half of an exact rescale
+    (``repro.elastic.rescale``).  It is *exact* because the hashed draw is a
+    pure function of ``(seed, step, global position, path)``: the global
+    batch at a given ``(seed, step)`` does not depend on ``n_shards`` at all
+    — shards merely slice it — so carrying ``(seed, step)`` over and
+    stamping the new layout reproduces, bit for bit, the stream a run at
+    the new shard count would have drawn from scratch.  The only
+    requirement (checked by ``rescale_spec``) is that the *global* batch
+    size stays fixed and divides evenly by the new shard count.
+
+    ``miss_shadow`` (the single-shard cache-miss replay state, see
+    ``engine.MissPlanningSource``) is layout-dependent and is deliberately
+    dropped: the rescaled run replans misses against its own cache.
+    """
+    return {
+        "step": int(state["step"]),
+        "seed": int(state["seed"]),
+        "shard": int(shard),
+        "n_shards": int(n_shards),
+    }
+
+
 def build_owner_plan(uniques: Sequence[np.ndarray], n_uniques: Sequence[int],
                      n_shards: int, owner_cap: int,
                      owner_unique_cap: int) -> Optional[OwnerPlan]:

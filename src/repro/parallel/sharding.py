@@ -187,6 +187,25 @@ def all_to_all(x, axis: str, split_axis: int = 0, concat_axis: int = 0):
     return jax.lax.all_to_all(x, axis, split_axis, concat_axis, tiled=True)
 
 
+def data_mesh(n_shards: int, devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """(Re)build the 1-axis ``("data",)`` mesh an N-shard run trains under —
+    the mesh-rebuild step of an elastic rescale (``repro.elastic.rescale``)
+    and the mesh ``GraphRuntime`` wires at construction.  ``None`` for
+    ``n_shards <= 1`` (the single-device paths take the no-mesh branch);
+    loud error when the process sees fewer devices than shards, since a
+    silent truncation would train a different topology than the spec says."""
+    if n_shards <= 1:
+        return None
+    import numpy as np
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} but only {len(devices)} jax devices are "
+            f"visible (force host devices via XLA_FLAGS=--xla_force_host_"
+            f"platform_device_count=N, see tools/ci.sh --multidevice)")
+    return Mesh(np.asarray(devices[:n_shards]), ("data",))
+
+
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     # jax.sharding.AxisType landed after 0.4.x; older versions default to
     # auto axes, which is exactly what we ask for on newer ones.

@@ -1,12 +1,13 @@
-from repro.train.checkpoint import CheckpointManager
-from repro.train.loop import LoopConfig, LoopResult, run_training
+from repro.train.checkpoint import CheckpointManager, TopologyMismatch
+from repro.train.loop import FenceInterrupt, LoopConfig, LoopResult, run_training
 from repro.train.step import (
     TrainHyper, init_gnn_train_state, init_train_state, make_gnn_train_step,
     make_prefill_step, make_serve_step, make_train_step,
 )
 
 __all__ = [
-    "CheckpointManager", "LoopConfig", "LoopResult", "run_training",
+    "CheckpointManager", "TopologyMismatch", "FenceInterrupt",
+    "LoopConfig", "LoopResult", "run_training",
     "TrainHyper", "init_gnn_train_state", "init_train_state",
     "make_gnn_train_step", "make_prefill_step", "make_serve_step",
     "make_train_step",

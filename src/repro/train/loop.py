@@ -10,6 +10,11 @@ Responsibilities (DESIGN.md §6):
     signal feeds the backup-worker / re-slice policy; here it is the hook +
     test surface).
   * simple metrics log (CSV) for the examples/benchmarks.
+  * step fences for elastic training: an optional ``fence`` callback runs
+    every ``fence_every`` completed steps; raising ``FenceInterrupt`` from
+    it stops the loop cleanly at a step boundary (state is consistent, no
+    final checkpoint is written) — the hook ``repro.elastic.manager`` uses
+    to detect dead shards and hand control to the rescale path.
 """
 
 from __future__ import annotations
@@ -24,6 +29,15 @@ import numpy as np
 from repro.train.checkpoint import CheckpointManager
 
 
+class FenceInterrupt(Exception):
+    """Raised by a step-fence callback to stop the loop at a step boundary.
+
+    The loop returns normally with ``LoopResult.interrupted_at`` set to the
+    number of completed steps; no final checkpoint is written, because the
+    interrupting party (e.g. ``repro.elastic.ElasticManager``) owns what
+    happens next — peer transfer, rescale, or abort."""
+
+
 @dataclasses.dataclass
 class LoopConfig:
     total_steps: int
@@ -31,6 +45,7 @@ class LoopConfig:
     log_every: int = 20
     straggler_factor: float = 3.0
     ewma_alpha: float = 0.1
+    fence_every: int = 1   # steps between fence-callback invocations
 
 
 @dataclasses.dataclass
@@ -40,6 +55,7 @@ class LoopResult:
     step_times: list
     stragglers: int
     resumed_from: Optional[int]
+    interrupted_at: Optional[int] = None   # completed steps at FenceInterrupt
 
 
 def run_training(
@@ -52,6 +68,8 @@ def run_training(
     on_metrics: Optional[Callable[[int, Dict], None]] = None,
     extra_base: Optional[Dict] = None,
     prejitted: bool = False,
+    fence: Optional[Callable[[int], None]] = None,
+    topology: Optional[Dict] = None,
 ) -> LoopResult:
     """``extra_base``: JSON-able dict merged into every checkpoint's
     ``extra`` manifest (e.g. the GraphRuntime spec, so a checkpoint is
@@ -59,11 +77,19 @@ def run_training(
 
     ``prejitted``: ``train_step`` is already a donated-state jitted
     callable — use it as-is so repeat ``run_training`` calls (chunked
-    training) reuse its compile cache instead of re-tracing."""
+    training) reuse its compile cache instead of re-tracing.
+
+    ``fence(step)``: called after every ``fence_every``-th completed step
+    (``step`` is the 0-based index just finished) and may raise
+    ``FenceInterrupt`` to stop the loop at that boundary.
+
+    ``topology``: JSON-able shard-layout descriptor stamped into every
+    checkpoint manifest and validated on auto-resume (a mismatched resume
+    raises ``repro.train.TopologyMismatch``)."""
     resumed_from = None
     start_step = 0
     if ckpt is not None:
-        restored = ckpt.restore_latest(state)
+        restored = ckpt.restore_latest(state, expect_topology=topology)
         if restored is not None:
             start_step, state, extra = restored
             resumed_from = start_step
@@ -72,6 +98,7 @@ def run_training(
 
     losses, step_times = [], []
     stragglers = 0
+    interrupted_at = None
     ewma = None
     jitted = train_step if prejitted else jax.jit(train_step,
                                                   donate_argnums=(0,))
@@ -96,17 +123,24 @@ def run_training(
             if on_metrics and step % loop_cfg.log_every == 0:
                 on_metrics(step, {"loss": loss, "step_time": dt, "ewma": ewma})
 
+            if fence is not None and (step + 1) % loop_cfg.fence_every == 0:
+                try:
+                    fence(step)
+                except FenceInterrupt:
+                    interrupted_at = step + 1
+                    break
+
             if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
                 extra = dict(extra_base or {})
                 if hasattr(data_iter, "state_dict"):
                     extra["data"] = data_iter.state_dict()
-                ckpt.save(step + 1, state, extra)
+                ckpt.save(step + 1, state, extra, topology=topology)
 
-        if ckpt is not None:
+        if ckpt is not None and interrupted_at is None:
             extra = dict(extra_base or {})
             if hasattr(data_iter, "state_dict"):
                 extra["data"] = data_iter.state_dict()
-            ckpt.save(loop_cfg.total_steps, state, extra)
+            ckpt.save(loop_cfg.total_steps, state, extra, topology=topology)
             ckpt.wait()
     finally:
         # async prefetch iterators (repro.graph.engine.PrefetchIterator) own a
@@ -115,4 +149,5 @@ def run_training(
             data_iter.close()
 
     return LoopResult(state=state, losses=losses, step_times=step_times,
-                      stragglers=stragglers, resumed_from=resumed_from)
+                      stragglers=stragglers, resumed_from=resumed_from,
+                      interrupted_at=interrupted_at)

@@ -1,0 +1,443 @@
+"""Elastic sharded training (repro.elastic, docs/elastic.md).
+
+Single-device tests cover the wire format, fault-injection semantics, the
+manager state machine (against a stub runtime), crash-safe checkpoint
+writes, and topology validation.  The ``multidevice``-marked tests run the
+real thing under forced host devices (tools/ci.sh --elastic):
+
+  * kill shard 2 of 4 at step 10 via FailurePlan → peer-transfer recovery
+    (checkpoint dir never read) → rescale to 3 shards → the continued loss
+    curve is BITWISE the never-failed 3-shard continuation from the same
+    transferred state;
+  * rescale a 4-shard checkpoint to 8 (and down to 2) shards → step-0
+    loss bitwise identical to a native run at the new count.
+"""
+
+import dataclasses
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro.elastic import (DEGRADED, HEALTHY, RESCALING, Chunk,
+                           ChunkCorruption, ElasticError, ElasticManager,
+                           ElasticSpec, FailurePlan, chunk_payload,
+                           pack_state, rescale_spec, transfer_state,
+                           unpack_state)
+from repro.graph.sampler import remap_shard_state
+from repro.train import CheckpointManager, FenceInterrupt, TopologyMismatch
+from repro.train.loop import LoopConfig, LoopResult
+
+N = 600
+BATCH = 48          # divisible by 4 (before) and 3 (after the rescale)
+
+
+# ---------------------------------------------------------------------------
+# transfer wire format
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "opt": {"m": np.full((5,), 0.25)},
+            "step": np.asarray(7, np.int32)}
+
+
+def test_pack_unpack_roundtrip_bitwise():
+    state = _tree()
+    payload = pack_state(state, {"source": {"step": 9, "seed": 3}})
+    out, extra = unpack_state(payload, _tree())
+    assert extra == {"source": {"step": 9, "seed": 3}}
+    for a, b in zip(np.asarray(out["params"]["w"]).ravel(),
+                    state["params"]["w"].ravel()):
+        assert a == b
+    assert np.asarray(out["opt"]["m"]).dtype == state["opt"]["m"].dtype
+
+
+def test_unpack_rejects_wrong_template():
+    payload = pack_state(_tree())
+    bad = _tree()
+    bad["params"]["w"] = np.zeros((2, 2), np.float32)   # wrong shape
+    with pytest.raises(ValueError, match="shape mismatch"):
+        unpack_state(payload, bad)
+    with pytest.raises(KeyError, match="missing leaf"):
+        unpack_state(payload, {"params": {"extra_leaf": np.zeros(3)}})
+
+
+def test_chunking_covers_payload_exactly():
+    data = bytes(range(256)) * 10
+    chunks = chunk_payload(data, 100)
+    assert [c.seq for c in chunks] == list(range(len(chunks)))
+    assert all(c.total == len(chunks) for c in chunks)
+    assert b"".join(c.payload for c in chunks) == data
+    assert all(c.verify() for c in chunks)
+    # tampered payload keeps the sender CRC -> verify() must fail
+    tampered = dataclasses.replace(chunks[0],
+                                   payload=b"X" + chunks[0].payload[1:])
+    assert not tampered.verify()
+    assert chunk_payload(b"", 64)[0].payload == b""   # empty still framed
+
+
+def test_transfer_detects_and_retransmits_corruption():
+    data = os.urandom(5000)
+    plan = FailurePlan(corrupt_chunks=(1, 3))
+    out, stats = transfer_state(data, chunk_bytes=1000,
+                                tamper=plan.tamper, max_retries=2)
+    assert out == data                       # reassembly is bitwise
+    assert stats.chunks == 5
+    assert stats.retransmits == 2            # one clean re-send per tamper
+    assert stats.bytes_transferred == len(data) + 2 * 1000
+    assert stats.payload_bytes == len(data)
+
+
+def test_transfer_raises_when_retries_exhausted():
+    always = lambda seq, attempt: seq == 0   # every attempt corrupted
+    with pytest.raises(ChunkCorruption, match="chunk 0"):
+        transfer_state(b"abcdef", chunk_bytes=2, tamper=always, max_retries=1)
+    # zero-retry budget: a single first-attempt corruption is fatal
+    plan = FailurePlan(corrupt_chunks=(0,))
+    with pytest.raises(ChunkCorruption):
+        transfer_state(b"abcdef", chunk_bytes=2, tamper=plan.tamper,
+                       max_retries=0)
+
+
+# ---------------------------------------------------------------------------
+# failure plan semantics
+# ---------------------------------------------------------------------------
+
+def test_failure_plan_predicates():
+    plan = FailurePlan(kill=((2, 10),), heartbeat_delay=((1, 4, 2),),
+                       corrupt_chunks=(3,))
+    assert plan.alive(2, 9) and not plan.alive(2, 10) and not plan.alive(2, 99)
+    assert plan.alive(0, 99)                      # other shards unaffected
+    assert not plan.delayed(1, 3) and plan.delayed(1, 4)
+    assert plan.delayed(1, 5) and not plan.delayed(1, 6)
+    assert plan.tamper(3, 0) and not plan.tamper(3, 1)   # first attempt only
+    assert not plan.tamper(2, 0)
+
+
+# ---------------------------------------------------------------------------
+# ElasticSpec
+# ---------------------------------------------------------------------------
+
+def test_elastic_spec_roundtrip_and_validation():
+    spec = ElasticSpec(lease_steps=3, min_shards=2, chunk_bytes=4096,
+                       max_transfer_retries=1, heartbeat_timeout_s=5.0)
+    assert ElasticSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) == spec
+    for bad in (dict(lease_steps=0), dict(min_shards=0),
+                dict(chunk_bytes=0), dict(max_transfer_retries=-1)):
+        with pytest.raises(ValueError):
+            ElasticSpec(**bad)
+
+
+def test_runtime_spec_carries_elastic():
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    spec = RuntimeSpec(graph=GraphSource(n_nodes=N, n_classes=8),
+                       model=paper_gnn_config("sage", n_nodes=N, n_classes=8),
+                       elastic=ElasticSpec(lease_steps=1))
+    back = RuntimeSpec.from_json(spec.to_json())
+    assert back.elastic == ElasticSpec(lease_steps=1)
+    assert RuntimeSpec.from_json(
+        dataclasses.replace(spec, elastic=None).to_json()).elastic is None
+
+
+# ---------------------------------------------------------------------------
+# manager state machine (stub runtime: no jax work, just the protocol)
+# ---------------------------------------------------------------------------
+
+class _StubRuntime:
+    """Duck-typed GraphRuntime: train() walks steps and honours the fence;
+    state is a tiny pytree so pack/transfer/unpack run for real."""
+
+    def __init__(self, n_shards=4, elastic=None):
+        self.spec = types.SimpleNamespace(n_shards=n_shards, ckpt_dir=None,
+                                          elastic=elastic, batch_size=BATCH)
+        self.state = {"w": np.zeros(3, np.float32)}
+        self.data_iter = types.SimpleNamespace(
+            state_dict=lambda: {"step": 0, "seed": 0, "n_shards": n_shards})
+        self.closed = False
+
+    def train(self, steps, on_metrics=None, fence=None):
+        interrupted = None
+        losses = []
+        for step in range(int(steps)):
+            losses.append(0.0)
+            if fence is not None:
+                try:
+                    fence(step)
+                except FenceInterrupt:
+                    interrupted = step + 1
+                    break
+        return LoopResult(state=self.state, losses=losses, step_times=[],
+                          stragglers=0, resumed_from=None,
+                          interrupted_at=interrupted)
+
+    def close(self):
+        self.closed = True
+
+
+def _stub_manager(plan, n_shards=4, **spec_kw):
+    rt = _StubRuntime(n_shards=n_shards)
+    mgr = ElasticManager(rt, plan=plan,
+                         spec=ElasticSpec(lease_steps=1, **spec_kw))
+    # recovery builds a real GraphRuntime; swap it for a stub rebuild
+    def _recover_stub():
+        dead, detected = mgr._pending
+        mgr._pending = None
+        mgr._consumed.update((s, at) for s, at in mgr.plan.kill
+                             if at <= detected)
+        n_after = mgr.n_shards - len(dead)
+        if n_after < mgr.spec.min_shards:
+            raise ElasticError("survivors < min_shards")
+        payload = pack_state(mgr.rt.state,
+                             {"source": mgr.rt.data_iter.state_dict()})
+        wire, _stats = transfer_state(payload,
+                                      chunk_bytes=mgr.spec.chunk_bytes,
+                                      tamper=mgr.plan.tamper,
+                                      max_retries=mgr.spec.max_transfer_retries)
+        mgr.state = RESCALING
+        mgr.history.append(RESCALING)
+        new_rt = _StubRuntime(n_shards=n_after)
+        new_rt.state, _ = unpack_state(wire, new_rt.state)
+        mgr.rt.close()
+        mgr.rt, mgr.n_shards = new_rt, n_after
+        mgr._leases = {s: mgr._done - 1 for s in range(n_after)}
+        mgr.state = HEALTHY
+        mgr.history.append(HEALTHY)
+    mgr._recover = _recover_stub
+    return mgr
+
+
+def test_manager_detects_kill_and_rescales():
+    mgr = _stub_manager(FailurePlan(kill=((2, 10),)))
+    res = mgr.run(20)
+    assert res.steps == 20 and len(res.losses) == 20
+    # lease_steps=1, last renewal at 9 -> fence 11 trips, 12 steps done
+    assert mgr.n_shards == 3
+    assert mgr.state == HEALTHY
+    assert res.history[:2] == [HEALTHY, DEGRADED]
+    assert res.history[-1] == HEALTHY
+
+
+def test_manager_healthy_run_never_transitions():
+    mgr = _stub_manager(None)
+    res = mgr.run(5)
+    assert res.history == [HEALTHY] and res.steps == 5
+
+
+def test_manager_tolerates_short_heartbeat_delay():
+    # a 1-fence delay within the lease grace must NOT trigger recovery
+    mgr = _stub_manager(FailurePlan(heartbeat_delay=((1, 4, 1),)))
+    res = mgr.run(10)
+    assert res.history == [HEALTHY] and mgr.n_shards == 4
+    # ... but a delay longer than the grace does
+    mgr2 = _stub_manager(FailurePlan(heartbeat_delay=((1, 4, 3),)))
+    res2 = mgr2.run(10)
+    assert DEGRADED in res2.history
+
+
+def test_manager_min_shards_floor():
+    mgr = _stub_manager(FailurePlan(kill=((0, 2), (1, 2), (2, 2),)),
+                        min_shards=2)
+    with pytest.raises(ElasticError):
+        mgr.run(10)
+
+
+def test_manager_refuses_checkpointed_runtime():
+    rt = _StubRuntime()
+    rt.spec.ckpt_dir = "/tmp/somewhere"
+    with pytest.raises(ValueError, match="rescale_checkpoint"):
+        ElasticManager(rt)
+
+
+# ---------------------------------------------------------------------------
+# sampler-state remap + spec rescale (single device, pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_remap_shard_state_drops_layout_keeps_stream_anchor():
+    state = {"step": 12, "seed": 5, "n_shards": 4, "miss_shadow": {"x": 1}}
+    out = remap_shard_state(state, 3)
+    assert out == {"step": 12, "seed": 5, "shard": 0, "n_shards": 3}
+
+
+def test_remapped_union_stream_is_exact():
+    # the global batch at (seed, step) must not depend on the shard count:
+    # the 4-shard union of per-shard batches == the 3-shard union == global
+    from repro.graph.engine import SageBatchSource
+    from repro.graph.generate import powerlaw_graph
+    from repro.graph.sampler import NeighborSampler
+    adj, labels = powerlaw_graph(0, N, avg_degree=8, n_classes=8)
+    sampler = NeighborSampler(adj, (5, 5), max_deg=32, seed=0)
+    nodes = np.arange(N, dtype=np.int32)
+
+    def union(n_shards, step):
+        per = BATCH // n_shards
+        got = []
+        for shard in range(n_shards):
+            src = SageBatchSource(sampler, nodes, labels, per, seed=0,
+                                  shard=shard, n_shards=n_shards, dedup=False)
+            src.load_state_dict(remap_shard_state(
+                {"step": step, "seed": 0}, n_shards, shard=shard))
+            got.append(src.next_batch()["levels"][0])
+        return np.concatenate(got)
+
+    np.testing.assert_array_equal(union(4, 7), union(3, 7))
+    np.testing.assert_array_equal(union(4, 12), union(1, 12))
+
+
+def test_rescale_spec_validates_and_rederives():
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    spec = RuntimeSpec(graph=GraphSource(n_nodes=N, n_classes=8),
+                       model=paper_gnn_config("sage", n_nodes=N, n_classes=8),
+                       batch_size=BATCH, n_shards=4, ckpt_dir="/tmp/old")
+    out = rescale_spec(spec, 3)
+    assert out.n_shards == 3 and out.batch_size == BATCH
+    assert out.ckpt_dir is None            # old-topology dir never carries over
+    assert out.owner_cap is None and out.owner_unique_cap is None  # stay derived
+    with pytest.raises(ValueError, match="not divisible"):
+        rescale_spec(spec, 5)
+    # pinned caps are re-derived at the new count
+    pinned = dataclasses.replace(spec, frontier_cap=512, owner_cap=256,
+                                 owner_unique_cap=256)
+    out2 = rescale_spec(pinned, 2)
+    from repro.graph.sampler import default_owner_caps
+    assert (out2.owner_cap, out2.owner_unique_cap) == default_owner_caps(512, 2)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints + topology validation (single device)
+# ---------------------------------------------------------------------------
+
+def test_interrupted_checkpoint_write_never_resumed(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = CheckpointManager(d, async_save=False)
+    state = {"w": np.arange(4, dtype=np.float32)}
+    ck.save(1, state, {"data": {"step": 1}})
+    # simulate a crash mid-write of step 2: tmp dir exists, no manifest
+    half = os.path.join(d, "step_0000000002.tmp")
+    os.makedirs(half)
+    with open(os.path.join(half, "arrays.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    assert CheckpointManager(d).list_steps() == [1]   # sweep + manifest gate
+    assert not os.path.exists(half)                   # stale tmp swept on open
+    # a fully-written-but-unpublished tmp (manifest present, no rename)
+    # is equally invisible and swept
+    ck2 = CheckpointManager(d, async_save=False)
+    restored = ck2.restore_latest({"w": np.zeros(4, np.float32)})
+    assert restored is not None and restored[0] == 1
+
+
+def test_topology_mismatch_raises_before_arrays(tmp_path):
+    ck = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"w": np.ones(3, np.float32)}
+    ck.save(2, state, {}, topology={"n_shards": 4, "batch_size": 64})
+    with pytest.raises(TopologyMismatch, match="GraphRuntime.rescale"):
+        ck.restore(2, state, expect_topology={"n_shards": 8, "batch_size": 64})
+    # matching + unasserted + legacy (no stamp) all pass
+    ck.restore(2, state, expect_topology={"n_shards": 4, "batch_size": 64})
+    ck.restore(2, state)
+    ck.save(3, state, {})                              # legacy: no topology
+    ck.restore(3, state, expect_topology={"n_shards": 8, "batch_size": 64})
+
+
+# ---------------------------------------------------------------------------
+# multidevice: the real thing
+# ---------------------------------------------------------------------------
+
+def _runtime_spec(n_shards, **kw):
+    from repro.configs.paper_gnn import paper_gnn_config
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    base = paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5)
+    model = dataclasses.replace(base, embedding=dataclasses.replace(
+        base.embedding, c=16, m=8, d_c=32, d_m=32,
+        lookup_impl="sharded:gather"))
+    return RuntimeSpec(graph=GraphSource(n_nodes=N, n_classes=8, avg_degree=8,
+                                         homophily=0.9),
+                       model=model, batch_size=kw.pop("batch_size", BATCH),
+                       n_shards=n_shards, pad_to=64, prefetch_depth=2,
+                       total_steps=14, **kw)
+
+
+@pytest.mark.multidevice(n=4)
+def test_kill_rescale_continuation_bitwise():
+    """The core elastic invariant (ISSUE 9): kill shard 2/4 at step 10,
+    recover by peer transfer ONLY (no checkpoint dir exists at all),
+    rescale to 3 shards, and the continued loss curve is bitwise the
+    never-failed 3-shard continuation from the same transferred state."""
+    from repro.graph.runtime import GraphRuntime
+    spec = _runtime_spec(4, elastic=ElasticSpec(lease_steps=1,
+                                                chunk_bytes=1 << 16))
+    rt = GraphRuntime.from_spec(spec)
+    plan = FailurePlan(kill=((2, 10),), corrupt_chunks=(1,))
+    mgr = ElasticManager(rt, plan=plan)
+    res = mgr.run(14)
+    try:
+        assert res.steps == 14 and len(res.losses) == 14
+        assert res.history == [HEALTHY, DEGRADED, RESCALING, HEALTHY]
+        (rep,) = res.reports
+        assert rep.failed_shards == (2,)
+        assert rep.detected_at_step == 11        # kill at 10 + lease grace 1
+        assert rep.steps_lost == 1
+        assert (rep.n_before, rep.n_after) == (4, 3)
+        assert rep.retransmits == 1              # the corrupted chunk re-sent
+        assert rep.bytes_transferred > rep.payload_bytes
+        assert res.runtime.spec.n_shards == 3
+        assert res.runtime.spec.ckpt_dir is None  # peer transfer only
+
+        # reference: never-failed 4-shard run to the interrupt point, then
+        # the same exact-rescale to 3 shards and the same remaining steps
+        rt4 = GraphRuntime.from_spec(spec)
+        ref_head = rt4.train(12)
+        rt3 = rt4.rescale(3)
+        rt4.close()
+        try:
+            ref_tail = rt3.train(2)
+        finally:
+            rt3.close()
+        assert res.losses == ref_head.losses + ref_tail.losses
+    finally:
+        res.runtime.close()
+
+
+@pytest.mark.multidevice(n=8)
+def test_rescale_checkpoint_bitwise_vs_native(tmp_path):
+    """An 8-shard rescale of a 4-shard checkpoint produces step-0 loss
+    bitwise identical to a native 8-shard run (and 4->2 likewise)."""
+    from repro.graph.runtime import GraphRuntime
+    ck = str(tmp_path / "ck4")
+    rt4 = GraphRuntime.from_spec(_runtime_spec(4, batch_size=64, ckpt_dir=ck))
+    rt4.train(0)                     # publishes the step-0 checkpoint
+    rt4.close()
+    for target in (8, 2):
+        rt = GraphRuntime.rescale_checkpoint(ck, target)
+        try:
+            got = rt.train(1).losses
+        finally:
+            rt.close()
+        native = GraphRuntime.from_spec(_runtime_spec(target, batch_size=64))
+        try:
+            want = native.train(1).losses
+        finally:
+            native.close()
+        assert got == want, f"rescale 4->{target} not bitwise: {got} vs {want}"
+
+
+@pytest.mark.multidevice(n=4)
+def test_runtime_topology_mismatch_points_at_rescale(tmp_path):
+    """Naively pointing a different-n_shards spec at an existing checkpoint
+    dir fails loudly at restore time, naming the sanctioned path."""
+    from repro.graph.runtime import GraphRuntime
+    ck = str(tmp_path / "ck")
+    rt4 = GraphRuntime.from_spec(_runtime_spec(4, batch_size=64, ckpt_dir=ck,
+                                               ckpt_every=2))
+    rt4.train(2)
+    rt4.close()
+    bad = GraphRuntime.from_spec(_runtime_spec(2, batch_size=64, ckpt_dir=ck))
+    try:
+        with pytest.raises(TopologyMismatch, match="GraphRuntime.rescale"):
+            bad.train(4)
+    finally:
+        bad.close()

@@ -34,6 +34,7 @@ def required_names() -> dict:
     sys.path.insert(0, str(ROOT / "src"))
     from repro.configs.base import EmbeddingSpec
     from repro.core.backend import available_backends
+    from repro.elastic.manager import ElasticSpec
     from repro.graph.runtime import RuntimeSpec
 
     req = {}
@@ -43,6 +44,8 @@ def required_names() -> dict:
         req[f.name] = "graph.runtime.RuntimeSpec field"
     for f in dataclasses.fields(EmbeddingSpec):
         req[f.name] = "configs.base.EmbeddingSpec field"
+    for f in dataclasses.fields(ElasticSpec):
+        req[f.name] = "elastic.manager.ElasticSpec field"
     return req
 
 

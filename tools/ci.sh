@@ -31,6 +31,12 @@
 #                              2` (train + val/test eval + checkpoint) and a
 #                              2-request `GraphInferenceEngine` serve via
 #                              `serve_gnn.py` — so the examples can't rot.
+#   tools/ci.sh --elastic      import gate + a forced-8-host-device elastic
+#                              kill/rescale smoke (FailurePlan kills a shard,
+#                              peer transfer + exact rescale recover it,
+#                              post-recovery curve asserted bitwise) + a
+#                              required-keys gate on the committed
+#                              BENCH_elastic.json, WITHOUT the tier-1 pytest.
 #
 # Mirrors ROADMAP "Tier-1 verify": import/collection health is a gate that
 # runs BEFORE the suite, so a broken optional dep fails loudly here instead
@@ -43,6 +49,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 RUN_BENCH=0
 RUN_MULTI=0
 RUN_EXAMPLES=0
+RUN_ELASTIC=0
 RUN_SUITE=1
 for arg in "$@"; do
     case "$arg" in
@@ -50,7 +57,8 @@ for arg in "$@"; do
         --bench-only)  RUN_BENCH=1; RUN_SUITE=0 ;;
         --multidevice) RUN_MULTI=1 ;;
         --examples)    RUN_EXAMPLES=1; RUN_SUITE=0 ;;
-        *) echo "usage: tools/ci.sh [--bench|--bench-only] [--multidevice] [--examples]" >&2
+        --elastic)     RUN_ELASTIC=1; RUN_SUITE=0 ;;
+        *) echo "usage: tools/ci.sh [--bench|--bench-only] [--multidevice] [--examples] [--elastic]" >&2
            exit 2 ;;
     esac
 done
@@ -111,7 +119,8 @@ from pathlib import Path
 root = Path(".")
 checked = 0
 for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
-              "BENCH_serving.json", "BENCH_compression.json"):
+              "BENCH_serving.json", "BENCH_compression.json",
+              "BENCH_elastic.json"):
     path = root / name
     if not path.exists():
         continue
@@ -147,6 +156,10 @@ for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
                 for key in ("table_bytes", "val_accuracy", "final_train_loss"):
                     assert isinstance(e.get(key), (int, float)), (bname, key, e)
                 entries.append(e)
+    elif name == "BENCH_elastic.json":
+        # one flat record; the full required-keys gate lives in --elastic
+        entries = [doc]
+        assert doc.get("post_recovery_bitwise") is True, doc.keys()
     else:
         entries = [r for r in doc.get("runs", {}).values()
                    if isinstance(r, dict)]
@@ -155,6 +168,69 @@ for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
         assert isinstance(e.get("dtype"), str) and e["dtype"], (name, e)
         checked += 1
 print(f"bench artifact gate OK ({checked} entries carry mode+dtype)")
+PY
+fi
+
+if [[ "$RUN_ELASTIC" == 1 ]]; then
+    echo "== [2/3] elastic kill/rescale smoke (8 forced host devices) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        python - <<'PY'
+import dataclasses
+
+from repro.configs.paper_gnn import paper_gnn_config
+from repro.elastic import (DEGRADED, HEALTHY, RESCALING, ElasticManager,
+                           ElasticSpec, FailurePlan)
+from repro.graph.runtime import GraphRuntime, GraphSource, RuntimeSpec
+
+# compressed schedule: shard 2 of 4 dies at step 2 (lease grace 1 -> detect
+# at step 3), one transfer chunk arrives corrupted, rescale to 3 shards,
+# and the continued curve must be bitwise the never-failed rescaled run
+N = 1000
+spec = RuntimeSpec(
+    graph=GraphSource(kind="powerlaw", seed=0, n_nodes=N, n_classes=8),
+    model=paper_gnn_config("sage", n_nodes=N, n_classes=8, fanout=5),
+    batch_size=48, n_shards=4, prefetch_depth=2,
+    elastic=ElasticSpec(lease_steps=1, chunk_bytes=1 << 16),
+).with_updates(c=16, m=8, d_c=64, d_m=64, lookup_impl="sharded:gather")
+graph = spec.graph.build()
+
+mgr = ElasticManager(GraphRuntime.from_spec(spec, graph=graph),
+                     plan=FailurePlan(kill=((2, 2),), corrupt_chunks=(1,)))
+res = mgr.run(6)
+assert res.history == [HEALTHY, DEGRADED, RESCALING, HEALTHY], res.history
+(rep,) = res.reports
+assert rep.n_after == 3 and rep.retransmits >= 1, rep
+res.runtime.close()
+
+rt4 = GraphRuntime.from_spec(spec, graph=graph)
+head = rt4.train(rep.detected_at_step + 1)
+rt3 = rt4.rescale(3)
+rt4.close()
+tail = rt3.train(6 - rep.detected_at_step - 1)
+rt3.close()
+assert res.losses == head.losses + tail.losses, "post-recovery curve diverged"
+print(f"elastic smoke OK: {rep.n_before}->{rep.n_after} shards, "
+      f"steps_lost={rep.steps_lost}, "
+      f"bytes_transferred={rep.bytes_transferred}, "
+      f"retransmits={rep.retransmits}, bitwise continuation")
+PY
+    echo "== [3/3] BENCH_elastic.json required-keys gate =="
+    python - <<'PY'
+import json
+from pathlib import Path
+
+doc = json.loads(Path("BENCH_elastic.json").read_text())
+# headline columns are steps-lost / bytes-moved, never CPU wall-clock
+for key in ("steps_lost", "detected_at_step", "payload_bytes",
+            "bytes_transferred", "chunks", "retransmits"):
+    assert isinstance(doc.get(key), int), (key, doc.get(key))
+assert doc.get("mode") in ("native", "interpret"), doc.get("mode")
+assert isinstance(doc.get("dtype"), str) and doc["dtype"], doc.get("dtype")
+topo = doc.get("topology")
+assert isinstance(topo, dict) and {"before", "after"} <= set(topo), topo
+assert doc.get("post_recovery_bitwise") is True, doc.get("post_recovery_bitwise")
+assert "recovery_wall_s_cpu" in doc  # present, labelled, non-headline
+print("BENCH_elastic.json gate OK")
 PY
 fi
 
