@@ -1,0 +1,185 @@
+"""Codes-placement benchmark (ISSUE 10): O(frontier) vs O(nodes) device
+code memory, measured as an accounting sweep — not wall-clock.
+
+``codes_placement="device"`` replicates the packed ``codes_buf`` into the
+params, so device code bytes grow linearly with the graph.
+``codes_placement="host"`` keeps the buffer in host RAM and the prefetch
+producer gathers each frontier's rows into the batch — device code bytes
+are then bounded by the *frontier cap*, which this sweep holds fixed while
+the graph grows >= 8x.  The claim lands as two columns:
+
+  ``device_resident_code_bytes``       bytes of packed codes inside the
+                                       device train state (codes_buf nbytes;
+                                       0 for host placement)
+  ``transferred_code_bytes_per_batch`` bytes of packed code rows the host
+                                       streams per batch (U_pad * n_words *
+                                       4; 0 for device placement — its rows
+                                       ride in the resident buffer)
+
+plus the per-stage producer timings the PrefetchIterator now accounts
+(``sample_us`` / ``code_gather_us`` / ``put_us``) — reported, not asserted:
+CPU wall-clock on this container says nothing about TPU H2D overlap, but
+the stage split shows where the producer's time actually goes.
+
+Bit-exactness is asserted, not sampled: the host-placement loss sequence
+must equal the replicated run bitwise at step 0 AND after 5 streaming
+steps (the gather commutes with decode), and the run fails loudly if any
+size breaks it.  Writes ``BENCH_offload.json`` (skipped under --smoke,
+which still runs a reduced sweep and the step-0 bitwise check).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import bench_entry, emit
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_offload.json"
+
+# Fixed frontier shape across the sweep: batch 32 @ fanouts (5, 5) has a
+# worst-case unique count of 32 + 160 + 800 = 992 -> cap 1024.  Every
+# sweep size uses the SAME cap, so any growth in device code bytes is the
+# graph, never the batch.
+BATCH = 32
+FANOUTS = (5, 5)
+FRONTIER_CAP = 1024
+SWEEP = (2_000, 4_000, 8_000, 16_000)      # 8x node growth
+TRAIN_STEPS = 5
+
+
+def _spec(n_nodes: int, placement: str):
+    from repro.configs.base import EmbeddingSpec, GNNConfig
+    from repro.graph.runtime import GraphSource, RuntimeSpec
+    emb = EmbeddingSpec(kind="hash_full", c=16, m=8, d_c=64, d_m=64,
+                        n_layers=2, lookup_impl="gather",
+                        codes_placement=placement)
+    model = GNNConfig(name=f"offload-{n_nodes}", model="sage",
+                      n_nodes=n_nodes, n_classes=16, d_e=16, hidden=32,
+                      fanouts=FANOUTS, embedding=emb)
+    return RuntimeSpec(graph=GraphSource(n_nodes=n_nodes), model=model,
+                       batch_size=BATCH, pad_to=64,
+                       frontier_cap=FRONTIER_CAP, prefetch_depth=2,
+                       total_steps=TRAIN_STEPS)
+
+
+def device_resident_code_bytes(params) -> int:
+    """Bytes of packed code rows living in the device param tree."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys and keys[-1] == "codes_buf":
+            total += int(np.asarray(leaf).nbytes)
+    return total
+
+
+def _run_one(n_nodes: int, placement: str, steps: int):
+    """Build, step ``steps`` batches through the prefetch pipeline, return
+    (losses, resident_bytes, per_batch_bytes, producer_stats)."""
+    from repro.graph.runtime import GraphRuntime
+    rt = GraphRuntime.from_spec(_spec(n_nodes, placement))
+    try:
+        resident = device_resident_code_bytes(rt.state["params"])
+        losses = []
+        for _ in range(steps):
+            b = rt.data_iter.next_batch()
+            rt.state, m = rt.jitted_step(rt.state, rt._to_device(b))
+            losses.append(float(np.asarray(m["loss"])))
+        stats = (rt.data_iter.stats()
+                 if hasattr(rt.data_iter, "stats") else {})
+        per_batch = float(stats.get("transferred_code_bytes_per_batch", 0.0))
+        return losses, resident, per_batch, stats
+    finally:
+        rt.close()
+
+
+def run():
+    interpret = jax.default_backend() != "tpu"
+    mode = "interpret" if interpret else "native"
+    sweep = SWEEP[:2] if common.SMOKE else SWEEP
+    steps = 2 if common.SMOKE else TRAIN_STEPS
+
+    entries = []
+    bitwise_step0 = True
+    bitwise_after = True
+    for n_nodes in sweep:
+        by_placement = {}
+        for placement in ("device", "host"):
+            losses, resident, per_batch, stats = _run_one(
+                n_nodes, placement, steps)
+            by_placement[placement] = (losses, resident, per_batch, stats)
+        l_dev = by_placement["device"][0]
+        l_host = by_placement["host"][0]
+        eq0 = l_dev[0] == l_host[0]
+        eqN = l_dev == l_host
+        bitwise_step0 &= eq0
+        bitwise_after &= eqN
+        for placement, (losses, resident, per_batch, stats) in \
+                by_placement.items():
+            entries.append(bench_entry(
+                f"codes_offload/{placement}/n{n_nodes}",
+                mode=mode, dtype="float32",
+                n_nodes=n_nodes, frontier_cap=FRONTIER_CAP,
+                codes_placement=placement,
+                device_resident_code_bytes=resident,
+                transferred_code_bytes_per_batch=per_batch,
+                bitwise_equal_vs_replicated=(True if placement == "device"
+                                             else bool(eqN)),
+                sample_us=float(stats.get("sample_us", 0.0)),
+                code_gather_us=float(stats.get("code_gather_us", 0.0)),
+                put_us=float(stats.get("put_us", 0.0)),
+                loss_step0=losses[0], loss_last=losses[-1]))
+            emit(f"codes_offload/{placement}/n{n_nodes}", 0.0,
+                 f"resident={resident}B per_batch={per_batch:.0f}B "
+                 f"bitwise_step0={eq0} bitwise_{steps}steps={eqN}")
+
+    host = [e for e in entries if e["codes_placement"] == "host"]
+    dev = [e for e in entries if e["codes_placement"] == "device"]
+    # the tentpole claim, asserted on every run (smoke included):
+    # host-placement device code bytes are O(frontier) — flat across the
+    # sweep and strictly below the replicated buffer — while the replicated
+    # baseline grows with the graph
+    host_bytes = [e["device_resident_code_bytes"] for e in host]
+    dev_bytes = [e["device_resident_code_bytes"] for e in dev]
+    assert all(b == host_bytes[0] for b in host_bytes), \
+        f"host device code bytes not flat across sweep: {host_bytes}"
+    assert all(h < d for h, d in zip(host_bytes, dev_bytes)), \
+        f"host placement not below replicated: {host_bytes} vs {dev_bytes}"
+    assert all(b2 > b1 for b1, b2 in zip(dev_bytes, dev_bytes[1:])), \
+        f"replicated baseline failed to grow with the graph: {dev_bytes}"
+    if not bitwise_step0:
+        raise AssertionError("host placement diverged from replicated at "
+                             "step 0 — the gather must commute with decode")
+    if not bitwise_after:
+        raise AssertionError(
+            f"host placement diverged from replicated within {steps} "
+            f"streaming steps")
+    emit("codes_offload/summary", 0.0,
+         f"host resident flat at {host_bytes[0]}B over {sweep[0]}->"
+         f"{sweep[-1]} nodes; replicated grows {dev_bytes[0]}->"
+         f"{dev_bytes[-1]}B; bitwise={bitwise_after}")
+
+    report = {
+        "device": jax.default_backend(),
+        "sweep": {"n_nodes": list(sweep), "batch": BATCH,
+                  "fanouts": list(FANOUTS), "frontier_cap": FRONTIER_CAP,
+                  "train_steps": steps},
+        "bitwise_equal_step0": bool(bitwise_step0),
+        "bitwise_equal_after_steps": bool(bitwise_after),
+        "entries": entries,
+    }
+    if common.SMOKE:
+        emit("codes_offload/json", 0.0,
+             f"smoke: skipped writing {OUT_PATH.name}")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        emit("codes_offload/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -4,6 +4,7 @@
 #   fig1_reconstruction  Figure 1  — coding schemes vs entity count
 #   fig3_collisions      Figure 3  — median vs zero LSH threshold
 #   sampler_pipeline     ISSUE 1   — dedup-decode rows + prefetch steps/sec
+#   codes_offload        ISSUE 10  — host codes placement: O(frontier) device bytes
 #   decode_backends      ISSUE 2   — gather/onehot/pallas/cached frontier decode
 #   sharded_pipeline     ISSUE 3   — 1- vs 4-shard streaming step (8 forced devices)
 #   serving_gnn          ISSUE 4   — GraphRuntime serve(): miss-only cached decode
@@ -31,6 +32,7 @@ MODULES = [
     "table2_4_6_memory",   # instant, exact — first
     "fig3_collisions",
     "sampler_pipeline",
+    "codes_offload",
     "decode_backends",
     "sharded_pipeline",
     "serving_gnn",

@@ -41,6 +41,13 @@ class EmbeddingSpec:
     # TT rank r of the "tt" compression family (lookup_impl="tt" — see
     # core.backend.family_of); ignored by the paper and hashemb families.
     tt_rank: int = 8
+    # Where the packed ``codes_buf`` lives: "device" replicates it in HBM
+    # (O(#nodes) device memory); "host" keeps it in host RAM and the batch
+    # source / prefetch producer gathers each frontier's code rows into the
+    # ``FrontierBatch.codes`` leaf, so the device holds O(frontier) code
+    # bytes.  Bitwise-identical outputs either way (the gather commutes with
+    # decode).  Ignored by kinds/families without a codes_buf.
+    codes_placement: str = "device"     # "device" | "host"
 
     def to_config(self, n_entities: int, d_e: int, compute_dtype: str) -> EmbeddingConfig:
         return EmbeddingConfig(
@@ -52,7 +59,7 @@ class EmbeddingSpec:
             cache_capacity=self.cache_capacity,
             cache_staleness=self.cache_staleness,
             param_dtype=self.param_dtype, quantize=self.quantize,
-            tt_rank=self.tt_rank,
+            tt_rank=self.tt_rank, codes_placement=self.codes_placement,
         )
 
 

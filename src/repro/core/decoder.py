@@ -28,6 +28,12 @@ parameters are laid out (``core.backend.family_of``, docs/decode_backends.md
            arXiv:2206.10581); the rank-``tt_rank`` contraction is fused into
            ``TTBackend.decode``.  light = frozen ``tt_g0_buf``/``tt_g1_buf``
            + trainable ``w0``.
+
+Codes placement is invisible here: every backend consumes *unpacked* codes
+``(B, m)``, and whether those came from a device-resident ``codes_buf``
+gather or from batch-carried rows (``codes_placement="host"``, see
+``core.embedding.embed_lookup``) the bit pattern entering ``apply_decoder``
+is identical — which is why host offload is bitwise-exact on every backend.
 """
 
 from __future__ import annotations

@@ -68,6 +68,12 @@ class EmbeddingConfig:
     cache_staleness: int = 0
     # TT rank r of the "tt" compression family (ignored by the others).
     tt_rank: int = 8
+    # Codes placement: "device" stores the packed ``codes_buf`` in params
+    # (replicated in HBM); "host" keeps it off-device — ``init_embedding``
+    # creates no ``codes_buf`` and every lookup must be handed the frontier's
+    # packed rows via ``embed_lookup(..., codes=...)`` (gathered on the host
+    # by the batch source / prefetch producer).  Same numerics either way.
+    codes_placement: str = "device"
 
     @property
     def is_compressed(self) -> bool:
@@ -87,6 +93,12 @@ class EmbeddingConfig:
         time, so it needs none — call-sites that build/checkpoint codes
         (graph runtime, LM init) gate on this, not ``is_compressed``."""
         return self.is_compressed and self.family != "hashemb"
+
+    @property
+    def codes_on_host(self) -> bool:
+        """True when the codes exist but live in host RAM (no device
+        ``codes_buf``): lookups consume batch-carried packed rows."""
+        return self.needs_codes and self.codes_placement == "host"
 
     def decoder_config(self) -> DecoderConfig:
         variant = "light" if self.kind.endswith("light") else "full"
@@ -125,14 +137,20 @@ def init_embedding(
     codes: Optional[Array] = None,
     aux=None,
 ) -> nn.Params:
+    if cfg.codes_placement not in ("device", "host"):
+        raise ValueError(
+            f"unknown codes_placement {cfg.codes_placement!r} "
+            f"(expected 'device' or 'host')")
     if cfg.kind == "dense":
         return {"table": nn.embed_init(key, (cfg.n_entities, cfg.d_e))}
     if not cfg.is_compressed:
         raise ValueError(f"unknown embedding kind {cfg.kind!r}")
     k_code, k_dec = jax.random.split(key)
-    if not cfg.needs_codes:
+    if not cfg.needs_codes or cfg.codes_on_host:
         # hashemb family: codes are position hashes recomputed per lookup —
-        # the only per-entity state would be the ids themselves
+        # the only per-entity state would be the ids themselves.
+        # codes_placement="host": the full buffer stays in host RAM (owned by
+        # the runtime / batch source), so params carry only the decoder.
         return {"decoder": init_decoder(k_dec, cfg.decoder_config())}
     if codes is None:
         codes = make_codes(k_code, cfg, aux)
@@ -154,32 +172,61 @@ def embed_lookup(
     interpret: bool = False,
     backend=None,
     plan=None,
+    codes: Optional[Array] = None,
 ) -> Array:
     """ids (...,) int32 -> embeddings (..., d_e).  ``backend`` is an optional
     resolved ``DecodeBackend`` overriding ``cfg.lookup_impl``; ``plan`` an
     optional ``graph.sampler.OwnerPlan`` for the owner-computes cross-shard
-    decode (only meaningful for flat frontier ids on a collective backend)."""
+    decode (only meaningful for flat frontier ids on a collective backend).
+
+    ``codes`` is the pre-gathered packed rows for ``ids`` — shape
+    ``ids.shape + (n_words,)`` uint32, the ``codes_buf[ids]`` gather done on
+    the host.  Required when ``cfg.codes_on_host`` (params then carry no
+    ``codes_buf``); when provided it substitutes the device-side
+    ``jnp.take`` bit-for-bit, so both placements decode identically."""
     if cfg.kind == "dense":
         table = params["table"].astype(jnp.dtype(cfg.compute_dtype))
         return table[ids]
     if not cfg.needs_codes:        # hashemb: hash the ids, no stored codes
         flat = jnp.reshape(ids, (-1,))
-        codes = codes_lib.position_codes(flat, cfg.c, cfg.m).reshape(
+        unpacked = codes_lib.position_codes(flat, cfg.c, cfg.m).reshape(
             *jnp.shape(ids), cfg.m)
     else:
-        packed = jnp.take(params["codes_buf"], ids, axis=0)   # (..., n_words)
-        codes = codes_lib.unpack_codes(packed, cfg.c, cfg.m)  # (..., m)
-    return apply_decoder(params["decoder"], codes, cfg.decoder_config(),
+        if codes is not None:
+            packed = codes                                    # (..., n_words)
+        elif "codes_buf" in params:
+            packed = jnp.take(params["codes_buf"], ids, axis=0)
+        else:
+            raise ValueError(
+                "embed_lookup: params carry no codes_buf and no batch codes "
+                "were passed — with codes_placement='host' every lookup must "
+                "receive the frontier's packed rows via codes=...")
+        unpacked = codes_lib.unpack_codes(packed, cfg.c, cfg.m)   # (..., m)
+    return apply_decoder(params["decoder"], unpacked, cfg.decoder_config(),
                          interpret=interpret, backend=backend, plan=plan)
 
 
-def decode_all(params: nn.Params, cfg: EmbeddingConfig, block: int = 8192) -> Array:
+def decode_all(params: nn.Params, cfg: EmbeddingConfig, block: int = 8192,
+               host_codes: Optional[Array] = None) -> Array:
     """Materialise the full reconstructed table (used by reconstruction
-    benchmarks and full-graph GNNs).  Blocked to bound peak memory."""
+    benchmarks and full-graph GNNs).  Blocked to bound peak memory.
+    ``host_codes`` is the full packed buffer when ``cfg.codes_on_host``
+    (each block's rows are staged to the device on demand)."""
     if cfg.kind == "dense":
         return params["table"]
     n = cfg.n_entities
     outs = []
+    if cfg.codes_on_host:
+        if host_codes is None:
+            raise ValueError("decode_all: codes_placement='host' needs "
+                             "host_codes (the full packed buffer)")
+        fn = jax.jit(lambda p, i, c: embed_lookup(p, i, cfg, codes=c))
+        for s in range(0, n, block):
+            e = min(s + block, n)
+            ids = jnp.arange(s, e, dtype=jnp.int32)
+            rows = jnp.asarray(host_codes[s:e], jnp.uint32)
+            outs.append(fn(params, ids, rows))
+        return jnp.concatenate(outs, axis=0)
     fn = jax.jit(lambda p, i: embed_lookup(p, i, cfg))
     for s in range(0, n, block):
         ids = jnp.arange(s, min(s + block, n), dtype=jnp.int32)

@@ -502,6 +502,20 @@ class PrefetchIterator:
     runs pass ``policy.make_frontier_placement(mesh)`` so each shard's
     frontier rows land on their own device straight off the host thread.
 
+    ``code_gather`` is the codes-placement hook (``codes_placement="host"``):
+    a host-side ``batch -> batch`` callable — typically ``attach_codes``
+    partial-applied to the full packed buffer — run by the producer thread
+    on each batch *before* the device put, so the frontier's code rows are
+    gathered for batch k+1 while the device computes batch k.  The producer
+    blocks on the transferred arrays after ``device_put``, which is what
+    makes the pipeline genuinely double-buffered: the H2D copy of the next
+    batch completes in the background, not lazily on first consumer use.
+
+    Per-stage producer wall-clock is accumulated and exposed via
+    ``stats()`` (``sample_us`` / ``code_gather_us`` / ``put_us`` +
+    ``transferred_code_bytes``) — the honest axis for judging whether the
+    host gather hides behind the device step.
+
     Resume semantics: each queue item carries the source state captured
     *after* producing that batch; ``state_dict()`` returns the state of the
     last batch the consumer actually took, so a checkpoint taken after
@@ -509,16 +523,23 @@ class PrefetchIterator:
     ahead the producer ran.
     """
 
-    def __init__(self, source, depth: int = 2, device=None):
+    def __init__(self, source, depth: int = 2, device=None, code_gather=None):
         self.source = source
         self.depth = max(1, int(depth))
         self._device = device
+        self._code_gather = code_gather
         self._lock = threading.Lock()     # serialises (re)starts vs producer
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
         self._q: "queue.Queue" = queue.Queue(maxsize=self.depth)
         self._last_state = self._snapshot()
+        # producer-side accounting (producer writes, stats() reads)
+        self._n_produced = 0
+        self._sample_us = 0.0
+        self._code_gather_us = 0.0
+        self._put_us = 0.0
+        self._transferred_code_bytes = 0
         self._start()
 
     # -- internals -------------------------------------------------------
@@ -535,19 +556,46 @@ class PrefetchIterator:
                                         name="engine-prefetch")
         self._thread.start()
 
+    @staticmethod
+    def _code_bytes(batch) -> int:
+        """Bytes of batch-carried packed code rows (the per-batch H2D code
+        traffic a host-placement run pays instead of a resident buffer)."""
+        total = 0
+        for leaf in jax.tree.leaves(
+                batch, is_leaf=lambda x: isinstance(x, FrontierBatch)):
+            if isinstance(leaf, FrontierBatch) and leaf.codes is not None:
+                total += int(np.asarray(leaf.codes).nbytes)
+        return total
+
     def _produce(self):
+        import time as _time
         stop, q = self._stop, self._q
         try:
             while not stop.is_set():
+                t0 = _time.perf_counter()
                 with self._lock:
                     if stop.is_set():
                         return
                     batch = self.source.next_batch()
                     state = self._snapshot()
+                t1 = _time.perf_counter()
+                if self._code_gather is not None:
+                    batch = self._code_gather(batch)
+                    self._transferred_code_bytes += self._code_bytes(batch)
+                t2 = _time.perf_counter()
                 if callable(self._device):
                     batch = self._device(batch)
                 else:
                     batch = jax.device_put(batch, self._device)
+                # block here, in the producer: the H2D copy of batch k+1
+                # completes while the consumer computes batch k (the actual
+                # double-buffering), and put_us measures the real transfer
+                jax.block_until_ready(batch)
+                t3 = _time.perf_counter()
+                self._sample_us += (t1 - t0) * 1e6
+                self._code_gather_us += (t2 - t1) * 1e6
+                self._put_us += (t3 - t2) * 1e6
+                self._n_produced += 1
                 item = (batch, state)
                 while not stop.is_set():
                     try:
@@ -594,6 +642,22 @@ class PrefetchIterator:
             self._thread = None
         if self._last_state is not None and hasattr(self.source, "load_state_dict"):
             self.source.load_state_dict(self._last_state)
+
+    def stats(self) -> Dict[str, float]:
+        """Cumulative producer-side accounting: per-stage wall-clock
+        (``sample_us`` sampling + source bookkeeping, ``code_gather_us``
+        host code-row gather, ``put_us`` device put incl. the blocking H2D
+        copy), produced-batch count, and code-row transfer volume."""
+        n = self._n_produced
+        return {
+            "n_produced": n,
+            "sample_us": self._sample_us,
+            "code_gather_us": self._code_gather_us,
+            "put_us": self._put_us,
+            "transferred_code_bytes": self._transferred_code_bytes,
+            "transferred_code_bytes_per_batch": (
+                self._transferred_code_bytes / n if n else 0.0),
+        }
 
     # -- checkpointable state -------------------------------------------
     def state_dict(self):

@@ -119,6 +119,11 @@ class RuntimeSpec:
       ``model.embedding.param_dtype``/``quantize``  decode precision: bf16
                               codebook storage and/or fused absmax-int8
                               (``core.backend.MixedPrecisionPolicy``).
+      ``model.embedding.codes_placement``  "host" keeps the packed codes
+                              buffer in host RAM: the producer gathers each
+                              frontier's code rows into the batch (device
+                              code memory is O(frontier), not O(nodes));
+                              bitwise-identical to "device".
       ``owner_cap``/``owner_unique_cap``  static owner-exchange capacities
                               (None = sized from ``frontier_cap``, see
                               ``graph.sampler.default_owner_caps``).
@@ -286,16 +291,37 @@ class GraphRuntime:
         from repro.core import embedding as emb_lib
         from repro.train import init_gnn_train_state, make_gnn_train_step
         key = jax.random.PRNGKey(spec.init_seed)
+        ecfg = cfg.embedding_config()
         self.codes = None
-        if cfg.embedding_config().needs_codes:
+        self.codes_on_host = ecfg.codes_on_host
+        if self.codes_on_host and self.fullgraph:
+            raise ValueError(
+                "codes_placement='host' needs the sampled (frontier) model "
+                "family — full-graph models decode every node per step, so "
+                "there is no O(frontier) working set to stream")
+        if ecfg.needs_codes:
             # numpy copy: the train state is donated per step, so a shared
             # device buffer would be deleted out from under a later rebuild
             # (the hashemb family needs no codes at all: position hashes are
-            # recomputed from the ids at every lookup)
+            # recomputed from the ids at every lookup).  With
+            # codes_placement="host" this numpy array IS the authoritative
+            # buffer — params carry no codes_buf at all.
             self.codes = np.asarray(
-                emb_lib.make_codes(key, cfg.embedding_config(), aux=adj))
+                emb_lib.make_codes(key, ecfg, aux=adj))
         self.state = init_gnn_train_state(key, cfg, codes=self.codes)
         self.model = GNNModel(cfg, interpret=self.interpret)
+        self._code_gather: Optional[Callable[[Any], Any]] = None
+        if self.codes_on_host:
+            from repro.graph.sampler import attach_codes
+            host_codes = self.codes
+
+            def _gather(batch):
+                if isinstance(batch, dict) and "frontier" in batch:
+                    batch = dict(batch)
+                    batch["frontier"] = attach_codes(batch["frontier"],
+                                                     host_codes)
+                return batch
+            self._code_gather = _gather
 
         # -- splits --------------------------------------------------------
         from repro.graph.generate import train_val_test_split
@@ -371,14 +397,22 @@ class GraphRuntime:
         # -- iterator (prefetch is a knob, not a code path) ----------------
         if spec.prefetch_depth > 0 and not self.fullgraph:
             device = self.place if self.mesh is not None else None
+            # codes_placement="host": the producer thread gathers batch
+            # k+1's code rows (and completes their H2D copy) while the
+            # device computes batch k
             self.data_iter = PrefetchIterator(self.source,
                                               depth=spec.prefetch_depth,
-                                              device=device)
+                                              device=device,
+                                              code_gather=self._code_gather)
             self._to_device: Callable[[Any], Any] = lambda b: b
         else:
             self.data_iter = self.source
-            self._to_device = self.place if self.mesh is not None else (
-                lambda b: b)
+            place = self.place if self.mesh is not None else (lambda b: b)
+            if self._code_gather is not None:
+                gather = self._code_gather
+                self._to_device = lambda b: place(gather(b))
+            else:
+                self._to_device = place
 
         # -- step + checkpointing ------------------------------------------
         self.train_step = make_gnn_train_step(
@@ -557,6 +591,9 @@ class GraphRuntime:
             fb = self.sampler.sample_frontier(batch.astype(np.int32),
                                               pad_to=self.spec.pad_to,
                                               rng=rng)
+            if self.codes_on_host:
+                from repro.graph.sampler import attach_codes
+                fb = attach_codes(fb, self.codes)
             logits = np.asarray(eval_fn(params, jax.device_put(fb)))[:n_real]
             labels = self.labels[batch[:n_real]]
             correct += int((logits.argmax(-1) == labels).sum())
@@ -580,6 +617,9 @@ class GraphRuntime:
         rng = np.random.default_rng(self.spec.eval_seed)
         fb = self.sampler.sample_frontier(ids, pad_to=self.spec.pad_to,
                                           rng=rng)
+        if self.codes_on_host:
+            from repro.graph.sampler import attach_codes
+            fb = attach_codes(fb, self.codes)
         return np.asarray(
             self.model.apply(self.state["params"], jax.device_put(fb)))
 
@@ -607,6 +647,10 @@ class GraphRuntime:
             batching = BatchingSpec()
         kw = dict(serve_batch=self.spec.serve_batch, pad_to=self.spec.pad_to,
                   interpret=self.interpret)
+        if self.codes_on_host:
+            # the engine gathers each (possibly permuted) serving frontier's
+            # code rows from this buffer — device stays O(frontier)
+            kw.setdefault("host_codes", self.codes)
         if batching:
             # engine request-count buckets must admit the batcher's flushes
             kw.setdefault("max_coalesce", batching.max_batch)

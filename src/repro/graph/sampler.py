@@ -255,6 +255,11 @@ class FrontierBatch:
                    Static (pytree aux, not a leaf): each bucketed value
                    retraces jit once, exactly like the serving engine's
                    miss buckets.
+    ``codes``      optional (U_pad, n_words) uint32 — the frontier rows of
+                   the packed code buffer (``codes_buf[unique]``), gathered
+                   host-side when ``codes_placement="host"`` so the device
+                   never holds the full O(#nodes) buffer.  Row-aligned with
+                   ``unique`` (attach AFTER any permutation/stacking).
     """
 
     unique: np.ndarray
@@ -263,26 +268,34 @@ class FrontierBatch:
     valid: Optional[np.ndarray] = None
     plan: Optional[OwnerPlan] = None
     n_decode: Optional[int] = None
+    codes: Optional[np.ndarray] = None
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         leaves = (self.unique, self.n_unique) + tuple(self.index_maps)
         aux = (len(self.index_maps), self.valid is not None,
-               self.plan is not None, self.n_decode)
+               self.plan is not None, self.n_decode,
+               self.codes is not None)
         if self.valid is not None:
             leaves = leaves + (self.valid,)
         if self.plan is not None:
             leaves = leaves + (self.plan,)
+        if self.codes is not None:
+            leaves = leaves + (self.codes,)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        n_maps, has_valid, has_plan, n_decode = aux
+        # aux grew a trailing has_codes flag; accept the old 4-tuple too so
+        # treedefs pickled before the codes leaf still unflatten.
+        n_maps, has_valid, has_plan, n_decode = aux[:4]
+        has_codes = aux[4] if len(aux) > 4 else False
         maps = tuple(leaves[2:2 + n_maps])
         rest = list(leaves[2 + n_maps:])
         valid = rest.pop(0) if has_valid else None
         plan = rest.pop(0) if has_plan else None
-        return cls(leaves[0], maps, leaves[1], valid, plan, n_decode)
+        codes = rest.pop(0) if has_codes else None
+        return cls(leaves[0], maps, leaves[1], valid, plan, n_decode, codes)
 
     # -- construction ----------------------------------------------------
     @classmethod
@@ -328,6 +341,23 @@ class FrontierBatch:
     def levels(self) -> List[np.ndarray]:
         """Rebuild the naive level list (testing / fallback path)."""
         return [self.unique[m] for m in self.index_maps]
+
+
+def attach_codes(fb: FrontierBatch, host_codes: np.ndarray) -> FrontierBatch:
+    """Gather the frontier's packed code rows from the host buffer.
+
+    ``codes_placement="host"``'s producer-side step: a numpy fancy-index
+    ``host_codes[fb.unique]`` (identical bit pattern to the device-side
+    ``jnp.take(codes_buf, ids)`` it replaces), attached as the batch's
+    ``codes`` leaf.  MUST run after any frontier permutation or stacking —
+    it keys off the *final* ``unique`` — which is why the prefetch producer
+    and the serving engine call it outermost, on the emitted batch."""
+    if fb.codes is not None:
+        return fb
+    ids = np.asarray(fb.unique)
+    rows = np.ascontiguousarray(
+        np.asarray(host_codes, np.uint32)[ids])     # (U_pad, n_words)
+    return dataclasses.replace(fb, codes=rows)
 
 
 class NeighborSampler:

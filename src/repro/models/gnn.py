@@ -116,8 +116,13 @@ def sage_forward_frontier(params, fb: FrontierBatch, cfg: GNNConfig,
     duplication factor in decode throughput."""
     ecfg = cfg.embedding_config()
     ids = sharding.logical(fb.unique, "frontier")
+    # batch-carried packed code rows (codes_placement="host"): row-aligned
+    # with the frontier, so they shard on the same axis as the ids
+    codes = (None if fb.codes is None
+             else sharding.logical(fb.codes, "frontier", None))
     hu = emb_lib.embed_lookup(params["embed"], ids, ecfg,
-                              backend=backend, plan=fb.plan)        # (U, de)
+                              backend=backend, plan=fb.plan,
+                              codes=codes)                          # (U, de)
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]                                       # (B, de)
     h1 = hu[fb.index_maps[1]]                                       # (B, f1, de)
@@ -144,12 +149,16 @@ def sage_forward_frontier_cached(params, fb: FrontierBatch, cfg: GNNConfig,
     # stacked frontiers carry an explicit mask: padding is per shard block,
     # not a global suffix)
     valid = fb.valid_mask()
+    codes = (None if fb.codes is None
+             else sharding.logical(fb.codes, "frontier", None))
     # the cache lookup wraps the whole owner exchange: decode_fn sees the
-    # full (unpermuted) frontier ids, so the batch's OwnerPlan stays valid
+    # full (unpermuted) frontier ids, so the batch's OwnerPlan (and the
+    # row-aligned batch codes) stay valid
     hu, new_state = cache.lookup(
         cache_state, ids,
         lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,
-                                       backend=backend, plan=fb.plan),
+                                       backend=backend, plan=fb.plan,
+                                       codes=codes),
         valid=valid)
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]
@@ -171,10 +180,13 @@ def sage_forward_frontier_missonly(params, fb: FrontierBatch, cfg: GNNConfig,
     ecfg = cfg.embedding_config()
     cache = CachedDecodeBackend(staleness=ecfg.cache_staleness)
     ids = sharding.logical(fb.unique, "frontier")
+    # decode_fn only sees the miss prefix ids[:n_decode]; the row-aligned
+    # batch codes are sliced to match
     hu, new_state = cache.lookup_missonly(
         cache_state, ids,
-        lambda i: emb_lib.embed_lookup(params["embed"], i, ecfg,
-                                       backend=backend),
+        lambda i: emb_lib.embed_lookup(
+            params["embed"], i, ecfg, backend=backend,
+            codes=None if fb.codes is None else fb.codes[:i.shape[0]]),
         n_decode, valid=fb.valid_mask())
     hu = sharding.logical(hu, "frontier", None)
     h0 = hu[fb.index_maps[0]]

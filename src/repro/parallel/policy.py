@@ -286,7 +286,10 @@ def frontier_batch_shardings(batch, mesh: Mesh, axis: Optional[str] = None):
                 n_unique=rep,
                 valid=None if v.valid is None else rows(v.valid),
                 plan=None if v.plan is None else jax.tree.map(rows, v.plan),
-                n_decode=v.n_decode)
+                n_decode=v.n_decode,
+                # batch-carried packed code rows (codes_placement="host"):
+                # row-aligned with ``unique``, so they split the same way
+                codes=None if v.codes is None else rows(v.codes))
         return jax.tree.map(lambda _: rep, v)
 
     return {key: fn(v) for key, v in batch.items()}

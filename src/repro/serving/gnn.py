@@ -76,13 +76,20 @@ class GraphInferenceEngine:
     at engine construction — not on the first request.  ``cache_capacity``
     sizes the cross-request hot-node cache (0 disables it; the default
     keeps ~4 frontiers' worth of rows).
+
+    ``host_codes`` is the full packed code buffer when the params were built
+    with ``codes_placement="host"`` (they then carry no ``codes_buf``): the
+    engine gathers each serving frontier's code rows host-side — after the
+    miss-first permutation, so rows stay row-aligned — and the device holds
+    only O(frontier) code bytes per microbatch.
     """
 
     def __init__(self, cfg: GNNConfig, params, sampler: NeighborSampler, *,
                  decode_backend: Optional[str] = None, serve_batch: int = 256,
                  frontier_cap: Optional[int] = None, pad_to: int = 256,
                  cache_capacity: Optional[int] = None, seed: int = 0,
-                 max_coalesce: int = 8, interpret: bool = False):
+                 max_coalesce: int = 8, interpret: bool = False,
+                 host_codes: Optional[np.ndarray] = None):
         if cfg.model != "sage":
             raise ValueError(
                 f"GraphInferenceEngine serves minibatched GraphSAGE; got "
@@ -118,6 +125,12 @@ class GraphInferenceEngine:
         ecfg = cfg.embedding_config()
         self._backend = backend_mod.get_backend(ecfg.lookup_impl,
                                                 interpret=interpret)
+        self.host_codes = (None if host_codes is None
+                           else np.asarray(host_codes, np.uint32))
+        if ecfg.codes_on_host and self.host_codes is None:
+            raise ValueError(
+                "codes_placement='host' params carry no codes_buf — pass "
+                "host_codes (the full packed buffer) to the engine")
 
         from repro.graph.engine import default_frontier_cap
         self.frontier_cap = int(
@@ -171,9 +184,16 @@ class GraphInferenceEngine:
         request — exposed so parity tests can run ``GNNModel.apply`` on the
         same batch.  Deterministic in ``(seed, node_ids)``."""
         ids = self._pad_request(np.asarray(node_ids, np.int32))
-        return FrontierBatch.from_levels(self._sample_levels(ids),
-                                         pad_to=self.pad_to,
-                                         cap=self.frontier_cap)
+        fb = FrontierBatch.from_levels(self._sample_levels(ids),
+                                       pad_to=self.pad_to,
+                                       cap=self.frontier_cap)
+        return self._attach_codes(fb)
+
+    def _attach_codes(self, fb: FrontierBatch) -> FrontierBatch:
+        if self.host_codes is None:
+            return fb
+        from repro.graph.sampler import attach_codes
+        return attach_codes(fb, self.host_codes)
 
     def _pad_request(self, ids: np.ndarray) -> np.ndarray:
         if ids.shape[0] > self.serve_batch:
@@ -293,10 +313,14 @@ class GraphInferenceEngine:
                 index_maps=tuple(inv[np.asarray(m)] for m in fb.index_maps),
                 n_unique=fb.n_unique,
                 valid=valid[perm])
+            # codes attach AFTER the miss-first permutation so the rows stay
+            # aligned with the (permuted) unique frontier
+            fb = self._attach_codes(fb)
             n_dec = self._bucket(n_miss, cap)
             h, logits, self._cache_state = self._forward(n_dec)(
                 self.params, jax.device_put(fb), self._cache_state)
         else:
+            fb = self._attach_codes(fb)
             n_dec = cap
             h, logits, _ = self._forward(-1)(self.params, jax.device_put(fb),
                                              None)

@@ -22,7 +22,8 @@ def test_required_names_come_from_live_code():
         assert name in req, name
     # spec fields across both dataclasses
     for name in ("lookup_impl", "tt_rank", "quantize", "batching",
-                 "owner_cap", "owner_unique_cap", "cache_plan_misses"):
+                 "owner_cap", "owner_unique_cap", "cache_plan_misses",
+                 "codes_placement"):
         assert name in req, name
 
 
@@ -48,6 +49,18 @@ def test_missing_spec_field_fails(tmp_path):
     missing = check_docs.missing_names(check_docs.docs_text(tmp_path))
     assert set(missing) == {"tt_rank"}
     assert missing["tt_rank"] == "configs.base.EmbeddingSpec field"
+
+
+def test_missing_codes_placement_fails(tmp_path):
+    # ISSUE 10: the new EmbeddingSpec field must be picked up automatically
+    # — redacting it from a docs copy has to fail the gate
+    for page in (ROOT / "docs").glob("*.md"):
+        (tmp_path / page.name).write_text(
+            re.sub(r"\bcodes_placement\b", "REDACTED", page.read_text()))
+    missing = check_docs.missing_names(check_docs.docs_text(tmp_path))
+    assert set(missing) == {"codes_placement"}
+    assert missing["codes_placement"] == "configs.base.EmbeddingSpec field"
+    assert check_docs.main(docs_dir=tmp_path) == 1
 
 
 def test_empty_docs_dir_is_loud(tmp_path):

@@ -9,9 +9,13 @@
 #                              module's code path so benchmarks can't
 #                              silently rot — including the fused per-dtype
 #                              decode, which raises if int8/bf16 drift
-#                              exceeds DRIFT_BOUNDS), and a gate asserting
-#                              the committed BENCH_*.json artifacts carry
-#                              mode + dtype on every entry
+#                              exceeds DRIFT_BOUNDS, and codes_offload,
+#                              which raises unless host placement is
+#                              bitwise with flat O(frontier) device code
+#                              bytes), and a gate asserting the committed
+#                              BENCH_*.json artifacts carry mode + dtype on
+#                              every entry (BENCH_offload.json additionally:
+#                              host bytes flat and < replicated)
 #   tools/ci.sh --bench-only   import gate + benchmark smoke, WITHOUT the
 #                              tier-1 pytest — the CI matrix runs tier-1 in
 #                              its own leg, so the bench leg shouldn't pay
@@ -120,7 +124,7 @@ root = Path(".")
 checked = 0
 for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
               "BENCH_serving.json", "BENCH_compression.json",
-              "BENCH_elastic.json"):
+              "BENCH_elastic.json", "BENCH_offload.json"):
     path = root / name
     if not path.exists():
         continue
@@ -160,6 +164,27 @@ for name in ("BENCH_kernels.json", "BENCH_decode.json", "BENCH_shard.json",
         # one flat record; the full required-keys gate lives in --elastic
         entries = [doc]
         assert doc.get("post_recovery_bitwise") is True, doc.keys()
+    elif name == "BENCH_offload.json":
+        # ISSUE 10: host placement must be bitwise AND O(frontier) —
+        # flat device code bytes across the sweep, strictly below the
+        # replicated baseline, which itself must grow with the graph
+        assert doc["bitwise_equal_step0"] is True, doc.keys()
+        assert doc["bitwise_equal_after_steps"] is True, doc.keys()
+        entries = doc["entries"]
+        for e in entries:
+            for key in ("device_resident_code_bytes",
+                        "transferred_code_bytes_per_batch", "n_nodes"):
+                assert isinstance(e.get(key), (int, float)), (name, key, e)
+            assert e.get("codes_placement") in ("device", "host"), e
+            assert e.get("bitwise_equal_vs_replicated") is True, e
+        host = sorted((e["n_nodes"], e["device_resident_code_bytes"])
+                      for e in entries if e["codes_placement"] == "host")
+        dev = sorted((e["n_nodes"], e["device_resident_code_bytes"])
+                     for e in entries if e["codes_placement"] == "device")
+        assert host and dev, "need both placements in the sweep"
+        assert len({b for _, b in host}) == 1, f"host bytes not flat: {host}"
+        assert all(h[1] < d[1] for h, d in zip(host, dev)), (host, dev)
+        assert all(b2 > b1 for (_, b1), (_, b2) in zip(dev, dev[1:])), dev
     else:
         entries = [r for r in doc.get("runs", {}).values()
                    if isinstance(r, dict)]
